@@ -1,0 +1,22 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def timeit(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6      # µs
+
+
+def emit(name: str, us_per_call: float, derived=""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,41 @@
+"""Cluster-scale sorting scenario: length-balanced batch construction for a
+training data pipeline (the paper's technique in the data layer), plus a
+robustness demo on adversarial instances.
+
+  PYTHONPATH=src python examples/sort_cluster.py
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np                                     # noqa: E402
+
+from repro.core import psort                           # noqa: E402
+from repro.data.pipeline import length_balanced_batches  # noqa: E402
+from repro.data.distributions import generate_instance  # noqa: E402
+
+
+def main():
+    # 1) length-balanced batching: zipf-ish sequence lengths (heavy dups —
+    #    the robustness case), batch 32
+    r = np.random.default_rng(0)
+    lengths = np.minimum(64 + (r.zipf(1.5, size=4096) % 1984), 2048)
+    batches, waste_naive, waste_sorted = length_balanced_batches(
+        lengths, batch=32, p=8)
+    print(f"[example] padding waste: naive {waste_naive:.1%} → "
+          f"length-sorted {waste_sorted:.1%} "
+          f"({batches.shape[0]} batches of 32)")
+    assert waste_sorted < waste_naive
+
+    # 2) the robustness demo: the adversarial instances sort exactly
+    for inst in ("Mirrored", "AllToOne", "DeterDupl", "Zero", "Staggered"):
+        x = generate_instance(inst, 8, 8192).astype(np.int32)
+        out, info = psort(x, p=8, algorithm="rquick", return_info=True)
+        assert (np.asarray(out) == np.sort(x)).all() and info["overflow"] == 0
+        print(f"[example] rquick sorted {inst:10s} "
+              f"(balance {info['balance']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end driver: train a ~100M-parameter MoE transformer for a few
+hundred steps with the paper's sort-based expert dispatch, async
+checkpointing and crash recovery (brief deliverable b).
+
+  PYTHONPATH=src python examples/train_moe_100m.py [--steps 200]
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import tempfile          # noqa: E402
+
+from repro.configs import get_config                    # noqa: E402
+from repro.launch.mesh import make_mesh_shape           # noqa: E402
+from repro.launch.train import train                    # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    # ~100M-param MoE: granite family scaled down (16 experts of d_ff=512,
+    # d_model=512, 8 layers, 32k vocab) with EP over model axis = 4.
+    cfg = dataclasses.replace(
+        get_config("granite-moe-1b-a400m"), name="moe-100m",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, d_ff=512,
+        vocab=32768, n_experts=16, top_k=4, remat="none")
+    print(f"[example] {cfg.name}: {cfg.param_count()/1e6:.0f}M params "
+          f"({cfg.active_param_count()/1e6:.0f}M active), sort dispatch")
+
+    mesh = make_mesh_shape((2, 4), ("data", "model"))
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="moe100m_ckpt_")
+    final, losses = train(cfg, mesh, steps=args.steps, batch=8, seq=128,
+                          ckpt_dir=ckpt, ckpt_every=50)
+    print(f"[example] finished {final} steps; "
+          f"loss {losses[0]:.3f} → {losses[-1]:.3f} (ckpts in {ckpt})")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .registry import get_config, list_archs, ARCHS        # noqa: F401
+from .base import SHAPES, ShapeConfig, ModelConfig, shape_applicable, smoke_variant  # noqa: F401

@@ -1,0 +1,15 @@
+"""repro.core — the paper's contribution: robust massively parallel sorting.
+
+The library's internal word is 64 bits (the paper sorts 64-bit elements, and
+the median-window lifting needs one value above the key space), so importing
+this package enables ``jax_enable_x64``.  All model/framework code in this
+repo declares explicit dtypes and is unaffected.
+"""
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)
+
+from .api import psort, default_mesh          # noqa: E402,F401
+from .types import (SortShard, make_shard, merge_shards, local_sort,  # noqa: E402,F401
+                    key_to_uint, uint_to_key)
+from .selection import select_algorithm       # noqa: E402,F401

@@ -1,0 +1,151 @@
+"""Public API: ``psort`` — distributed sort over a mesh axis.
+
+This is the paper's headline deliverable as a library: one entry point that
+covers the entire n/p spectrum by dispatching to GatherM / RFIS / RQuick /
+RAMS (``algorithm="auto"``, §IV Table I thresholds re-derived for TPU v5e in
+``selection.py``), with robust behavior on all input distributions.
+
+Two layers:
+  * ``*_inner`` functions (imported from the algorithm modules) run inside
+    ``shard_map`` and compose with other shard_map code (e.g. MoE dispatch);
+  * ``psort`` is the host-level convenience wrapper: takes a global array,
+    builds the mesh + shard_map, returns the globally sorted array.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import selection
+from .types import SortShard, key_to_uint, make_shard, pad_value, uint_to_key
+
+try:  # jax >= 0.4.35 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def default_mesh(p: Optional[int] = None, axis: str = "sort") -> Mesh:
+    devs = jax.devices()
+    p = p or len(devs)
+    if p > len(devs):
+        raise ValueError(f"requested p={p} > available devices {len(devs)}")
+    return Mesh(np.array(devs[:p]), (axis,))
+
+
+def _algorithm_fn(name: str):
+    # lazy per-name imports to avoid cycles and partial-build breakage
+    if name in ("rquick", "ntb-quick"):
+        from .rquick import rquick
+        fn = rquick if name == "rquick" else partial(rquick, robust=False)
+    elif name == "rfis":
+        from .rfis import rfis as fn
+    elif name in ("rams", "ntb-ams"):
+        from .rams import rams
+        fn = rams if name == "rams" else partial(rams, tie_break=False)
+    elif name == "bitonic":
+        from .bitonic import bitonic as fn
+    elif name in ("ssort", "ns-ssort"):
+        from .samplesort import samplesort
+        fn = samplesort if name == "ssort" else partial(samplesort, robust=False)
+    elif name == "gatherm":
+        from .gatherm import gather_merge as fn
+    elif name == "allgatherm":
+        from .gatherm import allgather_merge_sort as fn
+    else:
+        raise ValueError(f"unknown algorithm {name!r}")
+    return _wrap_result(fn)
+
+
+def _wrap_result(fn):
+    def wrapped(shard, axis_name, p, **kw):
+        out = fn(shard, axis_name, p, **kw)
+        if isinstance(out, tuple) and not hasattr(out, "shard"):
+            return out
+        return out.shard, out.overflow
+    return wrapped
+
+
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
+                                   "out_capacity", "mesh", "algo_kw"))
+def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
+               out_capacity, algo_kw):
+    algo_kw = dict(algo_kw)
+
+    def body(keys_blk, count_blk):
+        per = keys_blk.shape[1]
+        # global index payload proves permutation-ness in tests
+        base = jax.lax.axis_index(axis_name).astype(jnp.uint32) * np.uint32(per)
+        idx = base + jnp.arange(per, dtype=jnp.uint32)
+        shard = make_shard(keys_blk[0], count=count_blk[0], capacity=capacity,
+                           vals={"idx": idx})
+        fn = _algorithm_fn(algorithm)
+        out, overflow = fn(shard, axis_name, p, **algo_kw)
+        overflow = overflow + jnp.maximum(out.count - out_capacity, 0)
+        ok = jnp.minimum(out.count, out_capacity)
+        keys = out.keys[:out_capacity]
+        idx = out.vals.get("idx", jnp.zeros((out.capacity,), jnp.uint32))[:out_capacity]
+        return keys[None], idx[None], ok[None], overflow[None]
+
+    out = shard_map(body, mesh=mesh,
+                    in_specs=(P(axis_name), P(axis_name)),
+                    out_specs=(P(axis_name),) * 4,
+                    check_vma=False)(keys2d, counts)
+    return out
+
+
+def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
+          mesh: Optional[Mesh] = None, axis: str = "sort",
+          capacity_factor: float = 2.0, return_info: bool = False,
+          **algo_kw):
+    """Sort a host array with p emulated PEs.  Returns the sorted array
+    (and an info dict with overflow / balance when ``return_info``)."""
+    mesh = mesh or default_mesh(p, axis)
+    p = mesh.shape[axis]
+    keys = jnp.asarray(keys)
+    n = keys.shape[0]
+    orig_dtype = keys.dtype
+    u = key_to_uint(keys)
+
+    per = -(-max(n, 1) // p)                       # ceil(n/p)
+    capacity = max(4, int(np.ceil(per * capacity_factor)))
+    if algorithm == "auto":
+        algorithm = selection.select_algorithm(n, p)
+    out_capacity = _out_capacity(algorithm, n, p, per, capacity)
+
+    pad = pad_value(u.dtype)
+    flat = jnp.full((p * per,), pad, u.dtype).at[:n].set(u)
+    keys2d = flat.reshape(p, per)
+    counts = jnp.minimum(jnp.maximum(n - per * jnp.arange(p), 0), per).astype(jnp.int32)
+
+    keys_out, idx_out, counts_out, overflow = _psort_jit(
+        keys2d, counts, mesh, axis, p, algorithm, capacity, out_capacity,
+        tuple(sorted(algo_kw.items())))
+    keys_out = np.asarray(keys_out)
+    counts_out = np.asarray(counts_out)
+    pe_range = range(1) if algorithm == "allgatherm" else range(p)
+    parts = [keys_out[i, :counts_out[i]] for i in pe_range]
+    result = uint_to_key(jnp.asarray(np.concatenate(parts)), orig_dtype)
+    if return_info:
+        idx_parts = [np.asarray(idx_out)[i, :counts_out[i]] for i in range(p)]
+        info = {
+            "algorithm": algorithm,
+            "counts": counts_out,
+            "overflow": int(np.asarray(overflow).sum()),
+            "balance": counts_out.max() / max(1.0, n / p),
+            "perm": np.concatenate(idx_parts) if n else np.zeros((0,), np.uint32),
+            "n": n,
+        }
+        return result, info
+    return result
+
+
+def _out_capacity(algorithm: str, n: int, p: int, per: int, capacity: int) -> int:
+    if algorithm in ("gatherm", "allgatherm"):
+        return max(1, p * per)                     # concentrated output
+    return capacity

@@ -1,0 +1,60 @@
+"""Distributed bitonic sort (Batcher / Johnsson, paper §IV-D2) — the
+deterministic baseline.  log²p compare-split rounds; every round exchanges
+the *full* local block, which is why the β·(n/p)·log²p term makes it
+unattractive outside a narrow band of input sizes (paper Table I).
+
+Compare-split formulation with always-ascending local blocks: merge my
+block with the partner's and keep the lower or upper half depending on the
+stage direction.  Unlike the paper's implementation (which "fails to sort
+sparse inputs"), the padded-buffer merge handles sparse and duplicate
+inputs for free — padding is just the key-space maximum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hypercube import exchange_shard
+from .types import SortShard, local_sort, merge_shards, pad_value
+
+
+class BitonicResult(NamedTuple):
+    shard: SortShard
+    overflow: jax.Array
+
+
+def _split_half(merged: SortShard, cap: int, keep_low):
+    """Take [0,cap) or [cap,2cap) of a sorted padded 2·cap shard."""
+    pad = merged.pad
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    lo_keys = merged.keys[:cap]
+    hi_keys = merged.keys[cap:]
+    lo_count = jnp.minimum(merged.count, cap)
+    hi_count = jnp.maximum(merged.count - cap, 0)
+    keys = jnp.where(keep_low, lo_keys, hi_keys)
+    count = jnp.where(keep_low, lo_count, hi_count)
+    vals = {k: jnp.where(keep_low, v[:cap], v[cap:])
+            for k, v in merged.vals.items()}
+    keys = jnp.where(idx < count, keys, pad)
+    return SortShard(keys=keys, vals=vals, count=count.astype(jnp.int32))
+
+
+def bitonic(shard: SortShard, axis_name: str, p: int) -> BitonicResult:
+    d = p.bit_length() - 1
+    cap = shard.capacity
+    me = jax.lax.axis_index(axis_name)
+    shard = local_sort(shard)
+    for k in range(d):                     # stage: sorted blocks of 2^(k+1)
+        for j in range(k, -1, -1):         # substage distance 2^j
+            partner = me ^ (1 << j)
+            ascending = ((me >> (k + 1)) & 1) == 0
+            keep_low = jnp.where(ascending, me < partner, me > partner)
+            other = exchange_shard(shard, axis_name, p, j)
+            # pair-consistent tie order (lower PE's elements first) so both
+            # partners build the same merged sequence and split it disjointly
+            merged, _ = merge_shards(shard, other, capacity=2 * cap,
+                                     tie_a_first=(me < partner))
+            shard = _split_half(merged, cap, keep_low)
+    return BitonicResult(shard, jnp.int32(0))

@@ -1,0 +1,57 @@
+"""GatherM and AllGatherM (paper §II / §VII): the very-sparse-input regime.
+
+GatherM: binomial-tree gather-merge — after step t, PEs with t low zero bits
+hold the merged data of their 2^t-subcube; PE 0 ends with everything.
+AllGatherM: recursive-doubling all-gather-merge — everyone ends with
+everything (the building block reused by RFIS rows/columns).
+
+Neither fulfills the balanced-output constraint (paper §VII-A(1)) — the
+output lives on PE 0 / on all PEs; ``psort`` accounts for that with a
+concentrated output capacity.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .hypercube import allgather_merge, exchange_shard
+from .types import SortShard, local_sort, merge_shards, resize
+
+
+class GatherResult(NamedTuple):
+    shard: SortShard
+    overflow: jax.Array
+
+
+def gather_merge(shard: SortShard, axis_name: str, p: int,
+                 dims: Optional[Sequence[int]] = None) -> GatherResult:
+    """Binomial-tree gather-merge to PE 0 (lowest PE of the subcube)."""
+    dims = list(dims) if dims is not None else list(range(p.bit_length() - 1))
+    shard = local_sort(shard)
+    me = jax.lax.axis_index(axis_name)
+    overflow = jnp.int32(0)
+    for t in dims:
+        # active senders: PEs whose bits below t are zero and bit t is one
+        low_mask = (1 << t) - 1
+        is_sender = ((me & low_mask) == 0) & (((me >> t) & 1) == 1)
+        cap = shard.capacity
+        send = jax.tree.map(
+            lambda k: jnp.where(is_sender, k, jnp.zeros_like(k)), shard)
+        send = send.replace(count=jnp.where(is_sender, shard.count, 0),
+                            keys=jnp.where(is_sender, shard.keys, shard.pad))
+        recv = exchange_shard(send, axis_name, p, t)
+        keep = shard.replace(count=jnp.where(is_sender, 0, shard.count),
+                             keys=jnp.where(is_sender, shard.pad, shard.keys))
+        shard, ovf = merge_shards(keep, recv, capacity=2 * cap)
+        overflow = overflow + ovf
+    return GatherResult(shard, overflow)
+
+
+def allgather_merge_sort(shard: SortShard, axis_name: str, p: int,
+                         dims: Optional[Sequence[int]] = None) -> GatherResult:
+    """All-gather-merge: every PE ends with the full sorted input."""
+    shard = local_sort(shard)
+    out = allgather_merge(shard, axis_name, p, dims=dims)
+    return GatherResult(out, jnp.int32(0))

@@ -1,0 +1,92 @@
+"""Approximate median selection with a single reduction (paper §III-B).
+
+Each PE forwards the k elements around its local median; internal nodes
+merge two windows and keep the middle k.  The paper builds a binary
+reduction *tree* (implementable as an MPI reduction op).  On TPU we use the
+**butterfly (recursive-doubling)** form instead: at step t, exchange the
+window with partner ``i^2^t`` and keep the middle k of the merged 2k.
+Merging is multiset-commutative, so both partners compute the *identical*
+window; by induction every PE of the subcube ends with the same window —
+the splitter is agreed upon without a broadcast (one α·log p term saved vs.
+tree + bcast).  Every butterfly output is the value of some balanced binary
+combining tree over the p leaf windows, so the estimator distribution
+matches the paper's binary tree (App. H: rank error ≈ 1.44·n^(-0.39)).
+
+Windows live in a "lifted" uint64 space: real key u ↦ u+1, with 0 as the
+paper's virtual "-inf" filler and 2^64-1 as "+inf" (undefined entries left /
+right of a short local sequence).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hypercube import hc_exchange
+from .types import SortShard
+
+_LO = np.uint64(0)
+_HI = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def lift(keys_u: jax.Array) -> jax.Array:
+    return keys_u.astype(jnp.uint64) + np.uint64(1)
+
+
+def unlift(w: jax.Array, key_dtype) -> jax.Array:
+    return (w - np.uint64(1)).astype(key_dtype)
+
+
+def local_window(shard: SortShard, k: int, coin: jax.Array) -> jax.Array:
+    """k elements around the local median, ±inf-filled (paper's leaf step).
+
+    ``coin`` ∈ {0,1} decides floor/ceil centering for odd counts.
+    """
+    assert k % 2 == 0, "window size k must be even"
+    cap = shard.capacity
+    lifted = jnp.where(shard.valid_mask(), lift(shard.keys), _HI)
+    ext = jnp.concatenate([
+        jnp.full((k,), _LO, jnp.uint64), lifted, jnp.full((k,), _HI, jnp.uint64)])
+    m = shard.count
+    # window start (0-indexed into `lifted`): m/2 - k/2, +coin when m is odd
+    start = m // 2 - k // 2 + jnp.where(m % 2 == 1, coin, 0)
+    return jax.lax.dynamic_slice(ext, (start + k,), (k,))
+
+
+def merge_windows(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Middle k of the merged 2k (the internal-node step)."""
+    k = a.shape[0]
+    merged = jnp.sort(jnp.concatenate([a, b]))
+    return jax.lax.dynamic_slice(merged, (k // 2,), (k,))
+
+
+def butterfly_median_window(shard: SortShard, axis_name: str, p: int,
+                            dims: Sequence[int], k: int,
+                            seed) -> jax.Array:
+    """All PEs of the subcube spanned by ``dims`` obtain the same k-window."""
+    # deterministic coin shared by the whole subcube (seed has no PE term)
+    key = jax.random.PRNGKey(seed)
+    coin = jax.random.bernoulli(key).astype(jnp.int32)
+    w = local_window(shard, k, coin)
+    for t in dims:
+        w = merge_windows(w, hc_exchange(w, axis_name, p, t))
+    return w
+
+
+def splitter_from_window(w: jax.Array, seed) -> Tuple[jax.Array, jax.Array]:
+    """Pick the window median (a[k/2] vs a[k/2+1] by coin), still lifted.
+
+    Returns (splitter_lifted, is_empty).  A window that is entirely ±inf
+    filler means the subcube holds no elements.
+    """
+    k = w.shape[0]
+    coin = jax.random.bernoulli(jax.random.fold_in(
+        jax.random.PRNGKey(seed), 1)).astype(jnp.int32)
+    s = w[k // 2 - 1 + coin]
+    # fall back to the other candidate if the coin picked a filler
+    other = w[k // 2 - coin]
+    s = jnp.where((s == _LO) | (s == _HI), other, s)
+    is_empty = (s == _LO) | (s == _HI)
+    return s, is_empty

@@ -1,0 +1,185 @@
+"""RAMS — Robust Multi-level (AMS) Sample Sort (paper §V / App. G).
+
+Per level, within the current subcube of size p_sub (split into k = 2^b
+groups):
+  1. sample locally *with tie-breakers*: sample composite = (key, pe, pos)
+     packed in one u64 — tie-break info is attached to the O(k log k)
+     samples only, never to the data elements (the paper's low-overhead
+     scheme);
+  2. all-gather the samples inside the subcube (grouped collective — the
+     TPU analogue of ranking samples with FIS: one fused all-gather beats
+     emulating the 2-D grid for tiny arrays, cf. DESIGN.md §2);
+  3. select n_b = b·k splitters, classify local elements into n_b buckets
+     (Super Scalar Sample Sort classifier with implicit tie-breaking:
+     an element's composite is formed *locally* from (key, own_pe, own_pos));
+  4. psum the bucket histogram, greedily assign contiguous bucket ranges to
+     the k groups (ε-balance: imbalance ≤ max bucket ≈ total/(b·k));
+  5. compute each element's target PE inside its group from its *global*
+     position (hypercube prefix-scan of histograms) — perfect balance within
+     target groups, the property that distinguishes AMS from HykSort;
+  6. exchange via one fused all-to-all with Chernoff-provisioned slots.
+
+Static-shape adaptation (DESIGN.md §2): deterministic message assignment
+and NBX are replaced by the static SPMD schedule (all-to-all *is* a
+deterministic assignment with Θ(k) partners); a one-time random
+redistribution at the first level makes the fixed slot capacities sound on
+adversarial inputs (same Lemma-1 argument as RQuick — each PE then holds a
+random sample of its subcube's data at every level).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hypercube import (_alltoall_route, alltoall_shuffle, subcube_groups,
+                        subcube_prefix_sum)
+from .types import SortShard, local_sort
+
+_PE_BITS = 12
+_POS_BITS = 20
+_HI64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+class RAMSResult(NamedTuple):
+    shard: SortShard
+    overflow: jax.Array
+
+
+def default_levels(p: int, levels: Optional[int] = None) -> Sequence[int]:
+    """Split log2(p) into `levels` groups of bits, high bits first."""
+    d = p.bit_length() - 1
+    if levels is None:
+        levels = 1 if d <= 4 else (2 if d <= 10 else 3)
+    levels = max(1, min(levels, d)) if d else 1
+    base, rem = divmod(d, levels)
+    return [base + (1 if i < rem else 0) for i in range(levels)]
+
+
+def _composite(keys_u32, pe, pos, valid):
+    c = (keys_u32.astype(jnp.uint64) << np.uint64(_PE_BITS + _POS_BITS)) \
+        | (pe.astype(jnp.uint64) << np.uint64(_POS_BITS)) \
+        | pos.astype(jnp.uint64)
+    return jnp.where(valid, c, _HI64)
+
+
+def rams(shard: SortShard, axis_name: str, p: int, *,
+         seed: int = 0xA35, levels: Optional[int] = None,
+         oversample: int = 2, tie_break: bool = True,
+         shuffle: bool = True, slot_factor: float = 2.0) -> RAMSResult:
+    """Sort over the whole axis.  Requires uint32 keys (u64 keys would need
+    a 128-bit sample composite; psort's key transform covers f32/i32/u32)."""
+    if shard.keys.dtype != jnp.uint32:
+        raise ValueError("rams requires uint32 keys (use psort's transform)")
+    d = p.bit_length() - 1
+    assert p.bit_count() == 1 and shard.capacity < (1 << _POS_BITS)
+    bits = default_levels(p, levels)
+    cap = shard.capacity
+    overflow = jnp.int32(0)
+    me = jax.lax.axis_index(axis_name)
+
+    if shuffle:
+        shard, ovf = alltoall_shuffle(
+            shard, axis_name, p, seed,
+            slot_cap=_slot_cap(cap, p, slot_factor))
+        overflow = overflow + ovf
+    shard = local_sort(shard)
+
+    h = d                                   # dims of the current subcube
+    for lvl, b in enumerate(bits):
+        shard, ovf = _rams_level(shard, axis_name, p, h, b,
+                                 seed=seed + 7919 * (lvl + 1),
+                                 oversample=oversample, tie_break=tie_break,
+                                 slot_factor=slot_factor)
+        overflow = overflow + ovf
+        h -= b
+    return RAMSResult(shard, overflow)
+
+
+def _slot_cap(cap: int, p_sub: int, slot_factor: float) -> int:
+    mean = max(1.0, cap / p_sub)
+    return int(math.ceil(slot_factor * mean + 6 * math.sqrt(mean) + 6))
+
+
+def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
+                *, seed, oversample, tie_break, slot_factor):
+    """One k-way splitting level within the 2^h-subcubes."""
+    k = 1 << b
+    p_sub = 1 << h
+    p_g = p_sub >> b                       # PEs per target group
+    nb = max(k, oversample * k)            # number of buckets (b·k of paper)
+    cap = shard.capacity
+    me = jax.lax.axis_index(axis_name)
+    sub_rel = me & (p_sub - 1)             # my index within the subcube
+    groups = subcube_groups(p, h)
+    sub_dims = list(range(h))
+
+    # --- 1. local samples with tie-break composites ------------------------
+    s_per = max(1, -(-(2 * k * max(1, int(math.log2(k + 1)))) // p_sub))
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), me), 1)
+    pos = jax.random.randint(key, (s_per,), 0, jnp.maximum(shard.count, 1))
+    sample_keys = shard.keys[pos]
+    valid = (shard.count > 0)
+    samp = _composite(sample_keys, jnp.broadcast_to(sub_rel, (s_per,)),
+                      pos, valid & (pos < shard.count))
+    if not tie_break:
+        samp = jnp.where(samp == _HI64, samp,
+                         samp & ~np.uint64((1 << (_PE_BITS + _POS_BITS)) - 1))
+
+    # --- 2. gather + sort samples within subcube ---------------------------
+    all_samp = jax.lax.all_gather(samp, axis_name, axis_index_groups=groups,
+                                  tiled=True)
+    all_samp = jnp.sort(all_samp)
+    n_valid = jnp.sum(all_samp != _HI64)
+
+    # --- 3. select splitters, classify -------------------------------------
+    q = (jnp.arange(1, nb, dtype=jnp.int64) * n_valid) // nb
+    splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]   # (nb-1,)
+    elem_pos = jnp.arange(cap, dtype=jnp.int32)
+    elem = _composite(shard.keys, jnp.broadcast_to(sub_rel, (cap,)),
+                      elem_pos, shard.valid_mask())
+    if not tie_break:
+        elem = jnp.where(elem == _HI64, elem,
+                         elem & ~np.uint64((1 << (_PE_BITS + _POS_BITS)) - 1))
+    # SSSS classifier (kernels/kway jnp path): bucket = #splitters ≤ elem
+    bucket = jnp.sum(splitters[None, :] <= elem[:, None], axis=1).astype(jnp.int32)
+    bucket = jnp.where(shard.valid_mask(), bucket, nb)
+
+    # --- 4. histogram, psum, greedy contiguous group assignment ------------
+    hist = jnp.sum(bucket[:, None] == jnp.arange(nb)[None, :], axis=0
+                   ).astype(jnp.int64)                              # (nb,)
+    my_prefix, totals = subcube_prefix_sum(hist, axis_name, p, sub_dims)
+    total = jnp.sum(totals)
+    cum = jnp.cumsum(totals)
+    cum_before = cum - totals
+    mid = cum_before + totals // 2
+    g_of_bucket = jnp.clip((mid * k) // jnp.maximum(total, 1), 0, k - 1)
+    group_total = jnp.zeros((k,), jnp.int64).at[g_of_bucket].add(totals)
+    cum_grp = jnp.cumsum(group_total) - group_total                # before grp
+
+    # --- 5. per-element target PE (perfect balance within groups) ----------
+    # local position within my bucket (data is locally sorted ⇒ contiguous)
+    onehot = bucket[:, None] == jnp.arange(nb)[None, :]
+    q_in_bucket = jnp.sum(jnp.where(onehot, jnp.cumsum(onehot, axis=0) - 1, 0),
+                          axis=1).astype(jnp.int64)
+    bsafe = jnp.clip(bucket, 0, nb - 1)
+    g_e = g_of_bucket[bsafe]
+    pos_in_group = (cum_before[bsafe] - cum_grp[g_e]
+                    + my_prefix[bsafe] + q_in_bucket)
+    gt = jnp.maximum(group_total[g_e], 1)
+    t_in_group = (pos_in_group * p_g) // gt
+    dest = (g_e * p_g + t_in_group).astype(jnp.int32)
+    dest = jnp.where(shard.valid_mask(), dest, p_sub)
+
+    # --- 6. fused slotted all-to-all within the subcube --------------------
+    out, ovf = _alltoall_route(shard, dest, axis_name, p_sub,
+                               _slot_cap(cap, p_sub, slot_factor),
+                               groups=groups)
+    out = local_sort(out)
+    # restore working capacity
+    from .types import resize
+    out, ovf2 = resize(out, cap)
+    return out, ovf + ovf2

@@ -1,0 +1,143 @@
+"""Robust Fast Work-Inefficient Sorting (paper §V, App. D1/F).
+
+PEs form a conceptual √p × √p grid over the sort axis: column index = low
+``cb`` bits, row index = high ``rb`` bits.  Steps:
+
+  1. local sort;
+  2. all-gather-merge within rows and within columns (hypercube doubling,
+     O(α log p + β n/√p));
+  3. every PE ranks its row's elements within its column's elements under
+     the total order (key, origin_row, origin_col, local_idx) — the paper's
+     quadruple tie-breaking.  The gathered sequences arrive *already* in
+     that lexicographic order because every doubling step merges two blocks
+     with disjoint, ordered origin ranges ("left block first on ties" — the
+     SPMD realization of the paper's ←/H/→ bucket trick);
+  4. allreduce(+) of the partial ranks across the row ⇒ each PE knows the
+     global rank of every element of its row.  A *column* of PEs therefore
+     stores the complete ranked input;
+  5. delivery: element with rank g targets PE g·p/n; each element is kept
+     by exactly one column and routed within it (hypercube routing over the
+     row dims).  Output is perfectly balanced (⌈n/p⌉).
+
+SPMD adaptation note (DESIGN.md §2): the paper communicates *zero* origin
+information by keeping three physical buckets per PE; static shapes force
+us to carry two u32 side arrays (origin PE, local index) through the
+gathers instead.  The mechanism — lexicographic quadruple tie-breaking
+computed from merge provenance, no global id materialization before the
+gather — is preserved.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hypercube import allgather_merge, butterfly_sum, route_by_target
+from .types import SortShard, compact, local_sort
+
+_U32 = np.uint64(0xFFFFFFFF)
+
+
+class RFISResult(NamedTuple):
+    shard: SortShard
+    overflow: jax.Array
+
+
+class RFISRanks(NamedTuple):
+    """Ranking-only output: my row's gathered elements + their global ranks."""
+    row_data: SortShard
+    ranks: jax.Array           # (|row_data|,) int64, valid where row mask
+    total: jax.Array           # () global element count
+
+
+def grid_shape(p: int):
+    d = p.bit_length() - 1
+    cb = d // 2               # column bits (low) — row size 2^cb
+    rb = d - cb               # row bits (high)  — column size 2^rb
+    return rb, cb
+
+
+def _with_origin(shard: SortShard, axis_name: str) -> SortShard:
+    me = jax.lax.axis_index(axis_name).astype(jnp.uint32)
+    cap = shard.capacity
+    vals = dict(shard.vals)
+    vals["_orig"] = jnp.full((cap,), me, jnp.uint32)
+    vals["_lidx"] = jnp.arange(cap, dtype=jnp.uint32)
+    return shard.replace(vals=vals)
+
+
+def rfis_rank(shard: SortShard, axis_name: str, p: int) -> RFISRanks:
+    """Compute global ranks of all elements in my row (steps 1–4)."""
+    rb, cb = grid_shape(p)
+    me = jax.lax.axis_index(axis_name)
+    my_row = me >> cb
+    my_col = me & ((1 << cb) - 1)
+
+    shard = _with_origin(local_sort(shard), axis_name)
+    row = allgather_merge(shard, axis_name, p, dims=range(cb))
+    col = allgather_merge(shard, axis_name, p, dims=range(cb, cb + rb))
+
+    # --- partial rank of each row element within my column's data ---------
+    # row element a = (y, r=my_row, C_a, i);  col element b = (x, R_b, c=my_col, j)
+    # contribution = #{b : (x, R_b, c, j) < (y, my_row, C_a, i)}
+    y = row.keys                                   # (Nr,)
+    Ca = (row.vals["_orig"].astype(jnp.int64)) & ((1 << cb) - 1)
+    i_idx = row.vals["_lidx"].astype(jnp.int64)
+    x = col.keys                                   # (Nc,)
+    Rb = (col.vals["_orig"].astype(jnp.int64)) >> cb
+    j_idx = col.vals["_lidx"].astype(jnp.int64)
+    col_valid = col.valid_mask()
+
+    base = jnp.searchsorted(jnp.where(col_valid, x, col.pad), y,
+                            side="left").astype(jnp.int64)
+    # equal-key refinement via origin subkeys (2-D compare; RFIS operates in
+    # the sparse regime where gathered sizes are O(n/√p), cf. docstring)
+    scu = (Rb << 32) | j_idx                       # col subkey (R_b, j)
+    # threshold per row element:  C_a > c ⇒ (my_row+1)<<32 ;  C_a < c ⇒ my_row<<32
+    #                             C_a == c ⇒ my_row<<32 | i
+    mr = jnp.int64(my_row)
+    thr = jnp.where(Ca > my_col, (mr + 1) << 32,
+                    jnp.where(Ca < my_col, mr << 32, (mr << 32) | i_idx))
+    eq = (x[None, :] == y[:, None]) & col_valid[None, :]
+    tie_cnt = jnp.sum(eq & (scu[None, :] < thr[:, None]), axis=1)
+    partial = jnp.where(row.valid_mask(), base + tie_cnt, 0)
+
+    ranks = butterfly_sum(partial, axis_name, p, dims=range(cb))
+    total = butterfly_sum(col.count.astype(jnp.int64), axis_name, p,
+                          dims=range(cb))
+    return RFISRanks(row_data=row, ranks=ranks, total=total)
+
+
+def rfis(shard: SortShard, axis_name: str, p: int, *,
+         capacity: Optional[int] = None) -> RFISResult:
+    """Full RFIS: rank + balanced delivery (step 5)."""
+    rb, cb = grid_shape(p)
+    me = jax.lax.axis_index(axis_name)
+    my_col = me & ((1 << cb) - 1)
+    out_cap = capacity or shard.capacity
+
+    rk = rfis_rank(shard, axis_name, p)
+    row, ranks, total = rk.row_data, rk.ranks, rk.total
+    out_per = jnp.maximum((total + p - 1) // p, 1)
+    target = (ranks // out_per).astype(jnp.int32)
+
+    keep = row.valid_mask() & ((target & ((1 << cb) - 1)) == my_col)
+    vals = dict(row.vals)
+    vals["_tgt"] = target.astype(jnp.uint32)
+    row = row.replace(vals=vals)
+    kept = compact(row, keep)
+    # route within my column (row dims); capacity = whole-column volume is a
+    # hard upper bound on any intermediate load
+    route_cap = max(out_cap, kept.capacity)
+    routed, overflow = route_by_target(kept, axis_name, p,
+                                       dims=range(cb, cb + rb),
+                                       capacity=route_cap)
+    routed = local_sort(routed)
+    # shrink to output capacity
+    from .types import resize
+    out, ovf2 = resize(routed, out_cap)
+    out = out.replace(vals={k: v for k, v in out.vals.items()
+                            if not k.startswith("_")})
+    return RFISResult(out, overflow + ovf2)

@@ -1,0 +1,71 @@
+"""Single-level p-way sample sort (SSort, paper §VII) — the classical
+baseline that "delivers the data directly".  Θ(p) splitters, one exchange.
+
+``robust=True`` prepends Helman et al.'s random redistribution (the paper's
+§III-A folklore defense); without it, skewed instances overflow the static
+slots — the SPMD manifestation of the paper's "very slow even for rather
+large n/p" and the reason SSort needs n = Ω(p²/log p) to be efficient.
+
+``oracle_splitters`` implements NS-SSort (Fig. 2d): skip the sampling phase
+entirely and use externally supplied splitters — a lower bound for any
+single-exchange algorithm.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hypercube import _alltoall_route, alltoall_shuffle
+from .types import SortShard, local_sort, resize
+
+_HI64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+class SSortResult(NamedTuple):
+    shard: SortShard
+    overflow: jax.Array
+
+
+def samplesort(shard: SortShard, axis_name: str, p: int, *,
+               seed: int = 0x550, robust: bool = True,
+               sample_factor: int = 16, slot_factor: float = 2.0,
+               oracle_splitters: Optional[jax.Array] = None) -> SSortResult:
+    cap = shard.capacity
+    me = jax.lax.axis_index(axis_name)
+    overflow = jnp.int32(0)
+    slot_cap = int(math.ceil(slot_factor * max(1.0, cap / p)
+                             + 6 * math.sqrt(max(1.0, cap / p)) + 6))
+
+    if robust:
+        shard, ovf = alltoall_shuffle(shard, axis_name, p, seed,
+                                      slot_cap=slot_cap)
+        overflow = overflow + ovf
+    shard = local_sort(shard)
+
+    if oracle_splitters is not None:
+        splitters = jnp.asarray(oracle_splitters)
+        assert splitters.shape[0] == p - 1
+    else:
+        # sample 16·log p per PE (paper's tuning), gather, pick p-1 quantiles
+        s_per = max(1, sample_factor * max(1, int(math.log2(max(p, 2)))))
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), me)
+        pos = jax.random.randint(key, (s_per,), 0, jnp.maximum(shard.count, 1))
+        samp = shard.keys[pos].astype(jnp.uint64)
+        samp = jnp.where((pos < shard.count), samp, _HI64)
+        all_samp = jnp.sort(jax.lax.all_gather(samp, axis_name, tiled=True))
+        n_valid = jnp.sum(all_samp != _HI64)
+        q = (jnp.arange(1, p, dtype=jnp.int64) * n_valid) // p
+        splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]
+
+    dest = jnp.sum(splitters[None, :] <= shard.keys[:, None].astype(jnp.uint64),
+                   axis=1).astype(jnp.int32)
+    dest = jnp.where(shard.valid_mask(), dest, p)
+    out, ovf = _alltoall_route(shard, dest, axis_name, p, slot_cap)
+    overflow = overflow + ovf
+    out = local_sort(out)
+    out, ovf2 = resize(out, cap)
+    return SSortResult(out, overflow + ovf2)

@@ -1,0 +1,130 @@
+"""Algorithm auto-selection from the α/β cost model (paper §IV, Table I),
+re-calibrated for TPU v5e topology.
+
+The paper's regime boundaries were driven by BlueGene/Q MPI startup costs.
+Two things change on a TPU torus (DESIGN.md §2):
+
+  * point-to-point hypercube steps map to collective-permutes: per-step
+    cost α (launch + link latency);
+  * fused collectives (all-gather / psum / all-to-all) are hardware-routed:
+    they cost one launch *plus a torus-diameter pipeline latency*
+    α_hop · p^(1/3) — they do NOT pay the paper's per-message αp, which
+    moves the RAMS regime boundary down, but they are not free either.
+
+The four-regime structure of the paper survives with shifted boundaries:
+GatherM (very sparse) → RFIS (sparse) → RQuick (small) → RAMS (large).
+Costs are per-sort seconds for 32-bit words.
+"""
+from __future__ import annotations
+
+import math
+
+ALPHA = 2.0e-6          # per collective-permute step (launch + hop)
+ALPHA_C = 5.0e-6        # fused-collective launch
+ALPHA_HOP = 1.5e-6      # per torus hop (pipeline fill of fused collectives)
+BYTES_PER_WORD = 4
+ICI_BW = 50e9           # bytes/s per link
+BETA = BYTES_PER_WORD / ICI_BW
+LOCAL_RATE = 2e9        # words/s local sort/merge/partition throughput
+SLOT_OVERHEAD = 2.2     # static slot provisioning of the a2a exchanges
+
+
+def _d(p):
+    return math.log2(max(2, p))
+
+
+def _hops(p):
+    return p ** (1.0 / 3.0)         # 3-D torus diameter-ish
+
+
+def _coll(p):
+    return ALPHA_C + ALPHA_HOP * _hops(p)
+
+
+def _lg(n):
+    return math.log2(max(2, n))
+
+
+def cost_gatherm(n, p):
+    # binomial tree: d steps; root ingests all n words single-ported
+    return ALPHA * _d(p) + BETA * n + n / LOCAL_RATE
+
+
+def cost_allgatherm(n, p):
+    # doubling: volume doubles per step → ~2n per PE; all PEs merge n words
+    return ALPHA * _d(p) + BETA * 2 * n + n / LOCAL_RATE
+
+
+def cost_rfis(n, p):
+    d, sq = _d(p), math.sqrt(p)
+    row = n / sq
+    return (ALPHA * 2 * d                       # row+col gathers, routing
+            + BETA * 3 * row                    # 2 gathers + delivery
+            + (2 * row * _lg(row) + row) / LOCAL_RATE)  # merges + ranking
+
+
+def cost_rquick(n, p):
+    d = _d(p)
+    npp = n / p
+    return (ALPHA * (d * (d + 1) / 2)           # per-dim median butterflies
+            + ALPHA * 2 * d                     # shuffle + exchanges
+            + BETA * npp * (2 * d)              # shuffle + per-dim halves
+            + (npp * _lg(n) + npp * d) / LOCAL_RATE)
+
+
+def cost_rams(n, p, levels=None):
+    npp = n / p
+    d = _d(p)
+    l = levels or max(1, min(3, round(d / 6)))
+    k = p ** (1.0 / l)
+    return ((3 * l + 1) * _coll(p)              # samples, hist, a2a / level
+            + BETA * npp * (SLOT_OVERHEAD * l + 1)   # l exchanges + shuffle
+            + (npp * _lg(n) + npp * l * _lg(k)) / LOCAL_RATE)
+
+
+def cost_bitonic(n, p):
+    d = _d(p)
+    npp = n / p
+    steps = d * (d + 1) / 2
+    return ALPHA * steps + BETA * npp * steps + \
+        (npp * _lg(n) + npp * steps) / LOCAL_RATE
+
+
+def cost_ssort(n, p):
+    npp = n / p
+    # p-way splitters: every PE handles p sample words + p-slot exchange
+    return (_coll(p) * 3 + BETA * (npp * SLOT_OVERHEAD + 16 * _lg(p) * p / p)
+            + ALPHA_HOP * _hops(p)
+            + (npp * _lg(n) + p) / LOCAL_RATE)
+
+
+COSTS = {
+    "gatherm": cost_gatherm,
+    "rfis": cost_rfis,
+    "rquick": cost_rquick,
+    "rams": cost_rams,
+}
+
+
+def select_algorithm(n: int, p: int) -> str:
+    """The paper's four-regime selection: argmin of the model costs.
+
+    GatherM's output lives on one PE (no balance guarantee) → only
+    eligible for very sparse inputs (§VII-A(1)).  RAMS needs dense input
+    for its samples/slots to amortize.
+    """
+    cands = dict(COSTS)
+    if n > max(8, p // 8):
+        cands.pop("gatherm")
+    if n <= 4 * p:
+        cands.pop("rams", None)
+    return min(cands, key=lambda a: cands[a](max(1, n), p))
+
+
+def regime_table(p: int, exponents=range(-8, 24)):
+    """n/p sweep → selected algorithm; used by tests and EXPERIMENTS.md."""
+    rows = []
+    for e in exponents:
+        n = max(1, int(p * (2.0 ** e)))
+        rows.append((e, n, select_algorithm(n, p)))
+    return rows

@@ -1,0 +1,256 @@
+"""Core element representation for the distributed sorting library.
+
+The paper's algorithms exchange *dynamically sized* MPI messages.  JAX is a
+static-shape SPMD system, so every per-PE fragment of the input is held in a
+fixed-capacity, ascending-sorted buffer padded with the key-space maximum:
+
+    SortShard(keys=(C,), vals={name: (C,)}, count=())
+
+``count`` is the number of valid elements; ``keys[count:] == PAD``.  The
+capacity C is provisioned from the paper's own load guarantees (Lemma 3:
+subcube imbalance is O(1) w.h.p. after the initial random shuffle) and every
+algorithm returns an ``overflow`` flag that the tests assert to be zero on
+all ten adversarial input distributions.
+
+Keys are order-preserving bit-casts of the user dtype into uint32/uint64
+(the classic monotone float transform), so all comparisons inside the
+library are unsigned-integer comparisons and "+inf padding" is just the
+all-ones word.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Order-preserving key transforms
+# ---------------------------------------------------------------------------
+
+_UINT_MAX = {jnp.dtype("uint32"): np.uint32(0xFFFFFFFF),
+             jnp.dtype("uint64"): np.uint64(0xFFFFFFFFFFFFFFFF)}
+
+
+def key_to_uint(x: jax.Array) -> jax.Array:
+    """Map f32/f64/i32/i64/u32/u64 keys to unsigned ints, order-preserving."""
+    dt = x.dtype
+    if dt in (jnp.uint32, jnp.uint64):
+        return x
+    if dt == jnp.int32:
+        return (x.view(jnp.uint32) ^ np.uint32(0x80000000)).astype(jnp.uint32)
+    if dt == jnp.int64:
+        return x.view(jnp.uint64) ^ np.uint64(0x8000000000000000)
+    if dt == jnp.float32:
+        b = x.view(jnp.uint32)
+        # negative floats: flip all bits;  non-negative: flip the sign bit.
+        mask = jnp.where(b >> 31 == 1, np.uint32(0xFFFFFFFF), np.uint32(0x80000000))
+        return b ^ mask
+    if dt == jnp.float64:
+        b = x.view(jnp.uint64)
+        mask = jnp.where(b >> 63 == 1, np.uint64(0xFFFFFFFFFFFFFFFF),
+                         np.uint64(0x8000000000000000))
+        return b ^ mask
+    raise TypeError(f"unsupported key dtype {dt}")
+
+
+def uint_to_key(u: jax.Array, orig_dtype) -> jax.Array:
+    """Inverse of :func:`key_to_uint`."""
+    dt = jnp.dtype(orig_dtype)
+    if dt in (jnp.uint32, jnp.uint64):
+        return u
+    if dt == jnp.int32:
+        return (u ^ np.uint32(0x80000000)).view(jnp.int32)
+    if dt == jnp.int64:
+        return (u ^ np.uint64(0x8000000000000000)).view(jnp.int64)
+    if dt == jnp.float32:
+        mask = jnp.where(u >> 31 == 1, np.uint32(0x80000000), np.uint32(0xFFFFFFFF))
+        return (u ^ mask).view(jnp.float32)
+    if dt == jnp.float64:
+        mask = jnp.where(u >> 63 == 1, np.uint64(0x8000000000000000),
+                         np.uint64(0xFFFFFFFFFFFFFFFF))
+        return (u ^ mask).view(jnp.float64)
+    raise TypeError(f"unsupported key dtype {dt}")
+
+
+def pad_value(dtype) -> np.generic:
+    return _UINT_MAX[jnp.dtype(dtype)]
+
+
+# ---------------------------------------------------------------------------
+# SortShard
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SortShard:
+    """One PE's fixed-capacity fragment.  ``keys`` sorted ascending, padded."""
+
+    keys: jax.Array                      # (C,) uint32/uint64
+    vals: Dict[str, jax.Array]           # each (C,) — payload travels along
+    count: jax.Array                     # () int32, number of valid entries
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def pad(self):
+        return pad_value(self.keys.dtype)
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.count
+
+    def replace(self, **kw) -> "SortShard":
+        return dataclasses.replace(self, **kw)
+
+
+def make_shard(keys: jax.Array, count=None, capacity: Optional[int] = None,
+               vals: Optional[Dict[str, jax.Array]] = None,
+               sort_local: bool = True) -> SortShard:
+    """Build a SortShard from raw keys (any supported dtype)."""
+    u = key_to_uint(keys)
+    n = u.shape[0]
+    cap = capacity or n
+    if count is None:
+        count = jnp.int32(n)
+    count = jnp.asarray(count, jnp.int32)
+    pad = pad_value(u.dtype)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    if cap != n:
+        u = jnp.concatenate([u, jnp.full((cap - n,), pad, u.dtype)])
+        vals = {k: jnp.concatenate(
+                    [v, jnp.zeros((cap - n,) + v.shape[1:], v.dtype)])
+                for k, v in (vals or {}).items()}
+    vals = dict(vals or {})
+    u = jnp.where(idx < count, u, pad)
+    shard = SortShard(keys=u, vals=vals, count=count)
+    if sort_local:
+        shard = local_sort(shard)
+    return shard
+
+
+# Opt-in Pallas local-sort path (the TPU hot-spot kernel).  Off by default
+# on CPU because interpret-mode execution is slow; enabled by the kernel
+# integration tests and, on real TPU, by the launcher.
+USE_PALLAS_LOCAL_SORT = False
+
+
+def local_sort(shard: SortShard) -> SortShard:
+    """Sort a shard's valid elements ascending (stable w.r.t. input order)."""
+    pad = shard.pad
+    keys = jnp.where(shard.valid_mask(), shard.keys, pad)
+    if USE_PALLAS_LOCAL_SORT and _pallas_sortable(shard):
+        from repro.kernels.bitonic import local_sort_fast
+        if not shard.vals:
+            return shard.replace(keys=local_sort_fast(keys))
+        (vname, vals), = shard.vals.items()
+        ks, vs = local_sort_fast(keys, vals)
+        return shard.replace(keys=ks, vals={vname: vs})
+    if not shard.vals:
+        return shard.replace(keys=jnp.sort(keys))
+    order = jnp.argsort(keys, stable=True)
+    return shard.replace(keys=keys[order],
+                         vals={k: v[order] for k, v in shard.vals.items()})
+
+
+def _pallas_sortable(shard: SortShard) -> bool:
+    from repro.kernels.bitonic import supported
+    if not supported(shard.capacity, shard.keys.dtype):
+        return False
+    if len(shard.vals) > 1:
+        return False
+    return all(jnp.dtype(v.dtype).itemsize == 4 and v.ndim == 1
+               for v in shard.vals.values())
+
+
+# ---------------------------------------------------------------------------
+# Padded merge of two ascending-sorted shards
+# ---------------------------------------------------------------------------
+
+
+def _take(shard_keys, vals, order):
+    return shard_keys[order], {k: v[order] for k, v in vals.items()}
+
+
+def merge_shards(a: SortShard, b: SortShard, capacity: Optional[int] = None,
+                 tie_a_first: bool = True):
+    """Merge two sorted padded shards into one of size ``capacity``.
+
+    Returns (merged, overflow) where overflow counts elements dropped because
+    the combined valid count exceeded the capacity.  On ties, elements of
+    ``a`` precede elements of ``b`` (the stable "left block first" rule that
+    realizes the paper's implicit origin-ordering, cf. RFIS tie-breaking).
+    """
+    cap = capacity or max(a.capacity, b.capacity)
+    total = a.count + b.count
+    keys = jnp.concatenate([a.keys, b.keys])
+    # Padding must sort *after* any real element of the same (max) key value:
+    # give each entry a secondary "is-padding" flag and lexsort.  For the
+    # common key-only case a plain sort is sufficient and cheaper only when
+    # no payload exists AND keys cannot collide with the pad word; we keep
+    # the safe path everywhere (XLA fuses the two sort passes anyway).
+    # ``tie_a_first`` may be a traced bool (e.g. bitonic's compare-split
+    # needs the *pair-consistent* lower-PE-first order so both partners
+    # construct the identical merged sequence).
+    apad = ~a.valid_mask()
+    bpad = ~b.valid_mask()
+    tie_a = jnp.asarray(tie_a_first)
+    # tie order: valid a (0) < valid b (1) < padding (2), flipped when !tie_a
+    rank_a = jnp.where(apad, jnp.int32(2),
+                       jnp.where(tie_a, jnp.int32(0), jnp.int32(1)))
+    rank_b = jnp.where(bpad, jnp.int32(2),
+                       jnp.where(tie_a, jnp.int32(1), jnp.int32(0)))
+    rank_b = jnp.broadcast_to(rank_b, bpad.shape)
+    rank_a = jnp.broadcast_to(rank_a, apad.shape)
+    tie = jnp.concatenate([rank_a, rank_b])
+    order = jnp.lexsort((tie, keys))
+    vals = {k: jnp.concatenate([a.vals[k], b.vals[k]]) for k in a.vals}
+    mk, mv = _take(keys, vals, order)
+    if mk.shape[0] > cap:
+        mk = mk[:cap]
+        mv = {k: v[:cap] for k, v in mv.items()}
+    elif mk.shape[0] < cap:
+        pad = pad_value(mk.dtype)
+        extra = cap - mk.shape[0]
+        mk = jnp.concatenate([mk, jnp.full((extra,), pad, mk.dtype)])
+        mv = {k: jnp.concatenate([v, jnp.zeros((extra,) + v.shape[1:], v.dtype)])
+              for k, v in mv.items()}
+    new_count = jnp.minimum(total, jnp.int32(cap))
+    overflow = jnp.maximum(total - jnp.int32(cap), 0)
+    # re-pad keys beyond count (dropped elements / stale pads)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    mk = jnp.where(idx < new_count, mk, pad_value(mk.dtype))
+    return SortShard(keys=mk, vals=mv, count=new_count), overflow
+
+
+def resize(shard: SortShard, capacity: int):
+    """Grow/shrink a shard's buffer (sorted, padded).  Returns (shard, overflow)."""
+    if capacity == shard.capacity:
+        return shard, jnp.int32(0)
+    pad = shard.pad
+    if capacity > shard.capacity:
+        extra = capacity - shard.capacity
+        keys = jnp.concatenate([shard.keys, jnp.full((extra,), pad, shard.keys.dtype)])
+        vals = {k: jnp.concatenate([v, jnp.zeros((extra,) + v.shape[1:], v.dtype)])
+                for k, v in shard.vals.items()}
+        return SortShard(keys, vals, shard.count), jnp.int32(0)
+    keys = shard.keys[:capacity]
+    vals = {k: v[:capacity] for k, v in shard.vals.items()}
+    overflow = jnp.maximum(shard.count - capacity, 0)
+    return SortShard(keys, vals, jnp.minimum(shard.count, capacity)), overflow
+
+
+def compact(shard: SortShard, keep_mask: jax.Array) -> SortShard:
+    """Keep only elements where ``keep_mask`` (and valid); re-pack sorted."""
+    keep = keep_mask & shard.valid_mask()
+    pad = shard.pad
+    keys = jnp.where(keep, shard.keys, pad)
+    order = jnp.argsort(jnp.where(keep, jnp.int32(0), jnp.int32(1)), stable=True)
+    keys = keys[order]
+    vals = {k: v[order] for k, v in shard.vals.items()}
+    return SortShard(keys, vals, jnp.sum(keep).astype(jnp.int32))

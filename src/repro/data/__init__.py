@@ -1,0 +1,2 @@
+from .distributions import INSTANCES, generate_instance      # noqa: F401
+from .pipeline import TokenPipeline, length_balanced_batches  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+bitonic/ — local sort + 2-way merge networks (VMEM-resident, VPU-only)
+kway/    — Super Scalar Sample Sort k-way classifier with tie-breaking
+
+Each kernel ships ops.py (jit wrapper + fallback) and ref.py (pure-jnp
+oracle); tests sweep shapes × dtypes against the oracle in interpret mode.
+"""

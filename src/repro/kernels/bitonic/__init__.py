@@ -1,0 +1,2 @@
+from .ops import local_sort_fast, supported          # noqa: F401
+from .bitonic import sort_tile, merge_tiles          # noqa: F401

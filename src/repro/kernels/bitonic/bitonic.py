@@ -1,0 +1,169 @@
+"""Pallas TPU kernels: bitonic sort network + bitonic 2-way merge.
+
+Local sorting/merging is the compute hot spot of every algorithm in the
+paper (the O((n/p)·log n) term of Table I).  On TPU we sort a VMEM-resident
+tile laid out as (R, 128) — flat element index f = r·128 + l — with the
+classic Batcher network expressed entirely in vector ops:
+
+  * exchange distance 2^j ≥ 128: partner lives in another *sublane row*
+    (reshape to (R/2m, 2, m, 128), flip the pair axis);
+  * exchange distance 2^j < 128:  partner lives in another *lane*
+    (reshape the lane dim to (…, 2, m), flip) — a lane permute on the VPU.
+
+No gathers, no scalar loops: every compare-exchange is a full-tile vector
+op, and the network is unrolled at trace time (log²(C)/2 steps).  Ties are
+broken by flat index so that (key, payload) pairs are exchanged
+consistently — both partners compute identical swap decisions.
+
+Keys are uint32 (order-preserving transforms in ops.py); an optional uint32
+payload plane travels along.  The MXU is not used — sorting is a pure VPU
+workload; the kernel's job is keeping the working set in VMEM across all
+O(log² C) passes instead of round-tripping HBM per pass (the HBM-bound
+alternative), cf. EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _partner(x: jax.Array, j: int) -> jax.Array:
+    """Value of the partner element f ^ 2^j for every f (layout-aware)."""
+    R = x.shape[0]
+    if (1 << j) >= LANES:                       # sublane exchange
+        m = (1 << j) // LANES
+        return jnp.flip(x.reshape(R // (2 * m), 2, m, LANES), axis=1
+                        ).reshape(R, LANES)
+    m = 1 << j                                  # lane exchange
+    return jnp.flip(x.reshape(R, LANES // (2 * m), 2, m), axis=2
+                    ).reshape(R, LANES)
+
+
+def _flat_bit(R: int, j: int) -> jax.Array:
+    """(f >> j) & 1 for the (R,128) layout, as a bool plane."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (R, LANES), 0)
+    l = jax.lax.broadcasted_iota(jnp.int32, (R, LANES), 1)
+    f = r * LANES + l
+    return ((f >> j) & 1) == 1
+
+
+def _compare_exchange(keys, vals, j: int, want_min):
+    """One network step at distance 2^j. ``want_min``: bool plane."""
+    pk = _partner(keys, j)
+    upper = _flat_bit(keys.shape[0], j)         # my bit j set ⇒ I am f|2^j
+    # strict order with index tie-break: am I the smaller of the pair?
+    am_lower = (keys < pk) | ((keys == pk) & ~upper)
+    take_self = am_lower == want_min
+    out_k = jnp.where(take_self, keys, pk)
+    out_v = None
+    if vals is not None:
+        pv = _partner(vals, j)
+        out_v = jnp.where(take_self, vals, pv)
+    return out_k, out_v
+
+
+def _sort_network(keys, vals):
+    R = keys.shape[0]
+    n = R * LANES
+    d = int(math.log2(n))
+    for k in range(d):                          # stage: bitonic blocks 2^(k+1)
+        for j in range(k, -1, -1):
+            up = ~_flat_bit(R, k + 1)           # block direction
+            want_min = ~_flat_bit(R, j) == up
+            keys, vals = _compare_exchange(keys, vals, j, want_min)
+    return keys, vals
+
+
+def _merge_network(keys, vals):
+    """Inputs: [first half ascending | second half descending] (bitonic)."""
+    R = keys.shape[0]
+    n = R * LANES
+    d = int(math.log2(n))
+    for j in range(d - 1, -1, -1):
+        want_min = ~_flat_bit(R, j)             # ascending everywhere
+        keys, vals = _compare_exchange(keys, vals, j, want_min)
+    return keys, vals
+
+
+def _sort_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref):
+    k, v = _sort_network(keys_ref[...],
+                         vals_ref[...] if vals_ref is not None else None)
+    out_k_ref[...] = k
+    if out_v_ref is not None:
+        out_v_ref[...] = v
+
+
+def _merge_kernel(a_ref, b_ref, av_ref, bv_ref, out_k_ref, out_v_ref):
+    # reverse b to form a bitonic sequence, then one merge chain
+    b = jnp.flip(b_ref[...].reshape(-1)).reshape(b_ref.shape)
+    keys = jnp.concatenate([a_ref[...], b], axis=0)
+    vals = None
+    if av_ref is not None:
+        bv = jnp.flip(bv_ref[...].reshape(-1)).reshape(bv_ref.shape)
+        vals = jnp.concatenate([av_ref[...], bv], axis=0)
+    k, v = _merge_network(keys, vals)
+    out_k_ref[...] = k
+    if out_v_ref is not None:
+        out_v_ref[...] = v
+
+
+def _specs(R: int, n_tiles: int = 1):
+    return pl.BlockSpec((R, LANES), lambda i: (i, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_tile(keys: jax.Array, vals=None, *, interpret: bool = True):
+    """Sort a (R·128,)-element tile fully inside VMEM.  R·128 ≤ 64Ki words
+    keeps keys+vals+double-buffering well under the 16 MiB VMEM budget."""
+    n = keys.shape[0]
+    R = n // LANES
+    assert n % LANES == 0 and (n & (n - 1)) == 0, "tile must be 2^k·128"
+    k2 = keys.reshape(R, LANES)
+    if vals is None:
+        out = pl.pallas_call(
+            lambda kr, ok: _sort_kernel(kr, None, ok, None),
+            out_shape=jax.ShapeDtypeStruct((R, LANES), keys.dtype),
+            in_specs=[_specs(R)], out_specs=_specs(R),
+            grid=(1,), interpret=interpret)(k2)
+        return out.reshape(n)
+    v2 = vals.reshape(R, LANES)
+    ok, ov = pl.pallas_call(
+        _sort_kernel,
+        out_shape=(jax.ShapeDtypeStruct((R, LANES), keys.dtype),
+                   jax.ShapeDtypeStruct((R, LANES), vals.dtype)),
+        in_specs=[_specs(R), _specs(R)], out_specs=(_specs(R), _specs(R)),
+        grid=(1,), interpret=interpret)(k2, v2)
+    return ok.reshape(n), ov.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_tiles(a: jax.Array, b: jax.Array, av=None, bv=None, *,
+                interpret: bool = True):
+    """Merge two sorted tiles of equal power-of-two size (≥128 each)."""
+    n = a.shape[0]
+    R = n // LANES
+    assert a.shape == b.shape and n % LANES == 0
+    a2, b2 = a.reshape(R, LANES), b.reshape(R, LANES)
+    spec_in = pl.BlockSpec((R, LANES), lambda i: (i, 0))
+    spec_out = pl.BlockSpec((2 * R, LANES), lambda i: (i, 0))
+    if av is None:
+        out = pl.pallas_call(
+            lambda ar, br, ok: _merge_kernel(ar, br, None, None, ok, None),
+            out_shape=jax.ShapeDtypeStruct((2 * R, LANES), a.dtype),
+            in_specs=[spec_in, spec_in], out_specs=spec_out,
+            grid=(1,), interpret=interpret)(a2, b2)
+        return out.reshape(2 * n)
+    ok, ov = pl.pallas_call(
+        _merge_kernel,
+        out_shape=(jax.ShapeDtypeStruct((2 * R, LANES), a.dtype),
+                   jax.ShapeDtypeStruct((2 * R, LANES), av.dtype)),
+        in_specs=[spec_in] * 4, out_specs=(spec_out, spec_out),
+        grid=(1,), interpret=interpret)(a2, b2, av.reshape(R, LANES),
+                                        bv.reshape(R, LANES))
+    return ok.reshape(2 * n), ov.reshape(2 * n)

@@ -1,0 +1,63 @@
+"""Jitted public wrappers around the bitonic Pallas kernels.
+
+``local_sort_fast(keys, vals)`` sorts arbitrary power-of-two sizes:
+tiles ≤ ``MAX_TILE`` are sorted by one kernel launch; larger inputs are
+sorted tile-wise and combined with log(n/MAX_TILE) merge-kernel passes.
+Falls back to jnp for sizes/dtypes the TPU kernel does not target
+(non-128-multiples, 64-bit words).
+
+The kernels execute in ``interpret=True`` mode on CPU (this container);
+on TPU the same ``pallas_call`` lowers to Mosaic with the BlockSpecs
+declared in bitonic.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitonic
+from .bitonic import LANES
+
+MAX_TILE = 1 << 14          # 16Ki elements/tile: 64 KiB keys + 64 KiB vals
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def supported(n: int, dtype) -> bool:
+    return (_is_pow2(n) and n >= LANES
+            and jnp.dtype(dtype).itemsize == 4)
+
+
+def local_sort_fast(keys: jax.Array, vals=None, *, interpret: bool = True,
+                    use_kernel: bool = True):
+    """Sort keys (u32/i32/f32) ascending, carrying an optional u32 payload."""
+    n = keys.shape[0]
+    if not (use_kernel and supported(n, keys.dtype)):
+        return bitonic_ref(keys, vals)
+    if n <= MAX_TILE:
+        return bitonic.sort_tile(keys, vals, interpret=interpret)
+    # tile-wise sort + log2(n/tile) merge passes
+    t = MAX_TILE
+    if vals is None:
+        tiles = [bitonic.sort_tile(keys[i:i + t], interpret=interpret)
+                 for i in range(0, n, t)]
+        while len(tiles) > 1:
+            tiles = [bitonic.merge_tiles(tiles[i], tiles[i + 1],
+                                         interpret=interpret)
+                     for i in range(0, len(tiles), 2)]
+        return tiles[0]
+    pairs = [bitonic.sort_tile(keys[i:i + t], vals[i:i + t],
+                               interpret=interpret) for i in range(0, n, t)]
+    while len(pairs) > 1:
+        pairs = [bitonic.merge_tiles(pairs[i][0], pairs[i + 1][0],
+                                     pairs[i][1], pairs[i + 1][1],
+                                     interpret=interpret)
+                 for i in range(0, len(pairs), 2)]
+    return pairs[0]
+
+
+def bitonic_ref(keys, vals=None):
+    from . import ref
+    return ref.sort_tile_ref(keys, vals)

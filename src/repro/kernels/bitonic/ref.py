@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the bitonic sort / merge kernels."""
+import jax.numpy as jnp
+
+
+def sort_tile_ref(keys, vals=None):
+    if vals is None:
+        return jnp.sort(keys)
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def merge_tiles_ref(a, b, av=None, bv=None):
+    keys = jnp.concatenate([a, b])
+    if av is None:
+        return jnp.sort(keys)
+    vals = jnp.concatenate([av, bv])
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]

@@ -1,0 +1,1 @@
+from .ops import kway_classify        # noqa: F401

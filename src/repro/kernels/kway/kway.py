@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: Super Scalar Sample Sort k-way classifier (paper
+App. G) with implicit tie-breaking.
+
+Classifies C elements against up to 127 splitters.  GPU SSSS uses a
+branchless binary-search tree; on TPU a *broadcast compare* is the native
+formulation: the splitter vector is tiny, so a (block, n_split) outer
+comparison runs entirely on the VPU with no gathers and no data-dependent
+control flow — one fused pass computes bucket ids and the histogram
+(one-hot partial sums accumulated in VMEM across the grid).
+
+Tie-breaking (paper App. G): an element equal to its bounding splitter's
+key is re-compared on (pe, pos) — both sides are u32 planes, so the
+lexicographic compare is two vector ops.  Element tie info is generated
+locally (own PE id / own position); only the splitters carry communicated
+tie-break data, keeping the paper's "no per-element overhead" property.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_R = 64                      # 64×128 elements per grid step
+
+
+def _classify_block(keys, ties, s_keys, s_ties):
+    """keys/ties: (R,128) u32; s_keys/s_ties: (S,) u32 → bucket ids (R,128)."""
+    k = keys[..., None]                       # (R,128,1)
+    t = ties[..., None]
+    sk = s_keys[None, None, :]                # (1,1,S)
+    st = s_ties[None, None, :]
+    le = (sk < k) | ((sk == k) & (st <= t))   # splitter ≤ element (lex)
+    return jnp.sum(le.astype(jnp.int32), axis=-1)
+
+
+def _kway_kernel(keys_ref, ties_ref, sk_ref, st_ref, bucket_ref, hist_ref,
+                 *, n_buckets: int):
+    i = pl.program_id(0)
+    bucket = _classify_block(keys_ref[...], ties_ref[...],
+                             sk_ref[...], st_ref[...])
+    bucket_ref[...] = bucket
+    onehot = (bucket[..., None] ==
+              jnp.arange(n_buckets, dtype=jnp.int32)[None, None, :])
+    part = jnp.sum(onehot.astype(jnp.int32), axis=(0, 1))        # (NB,)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += part[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def kway_classify(keys: jax.Array, ties: jax.Array, s_keys: jax.Array,
+                  s_ties: jax.Array, *, n_buckets: int,
+                  interpret: bool = True):
+    """Returns (bucket_ids (C,), histogram (n_buckets,)).
+
+    C must be a multiple of 64·128 (ops.py pads); splitters are (NB-1,).
+    """
+    C = keys.shape[0]
+    R = C // LANES
+    assert C % (BLOCK_R * LANES) == 0
+    grid = R // BLOCK_R
+    blk = pl.BlockSpec((BLOCK_R, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((s_keys.shape[0],), lambda i: (0,))
+    hspec = pl.BlockSpec((1, n_buckets), lambda i: (0, 0))
+    bucket, hist = pl.pallas_call(
+        functools.partial(_kway_kernel, n_buckets=n_buckets),
+        out_shape=(jax.ShapeDtypeStruct((R, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((1, n_buckets), jnp.int32)),
+        in_specs=[blk, blk, sspec, sspec],
+        out_specs=(blk, hspec),
+        grid=(grid,), interpret=interpret,
+    )(keys.reshape(R, LANES), ties.reshape(R, LANES), s_keys, s_ties)
+    return bucket.reshape(C), hist[0]

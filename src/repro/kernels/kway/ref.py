@@ -1,0 +1,17 @@
+"""Pure-numpy oracle for the k-way classifier kernel (u64 composite keys —
+numpy is used so the oracle is independent of the jax x64 flag)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def kway_classify_ref(keys, ties, s_keys, s_ties, *, n_buckets: int):
+    k = np.asarray(keys).astype(np.uint64)
+    t = np.asarray(ties).astype(np.uint64)
+    sk = np.asarray(s_keys).astype(np.uint64)
+    st = np.asarray(s_ties).astype(np.uint64)
+    elem = (k << np.uint64(32)) | t
+    spl = (sk << np.uint64(32)) | st
+    bucket = np.sum(spl[None, :] <= elem[:, None], axis=1).astype(np.int32)
+    hist = np.sum(bucket[:, None] == np.arange(n_buckets)[None, :],
+                  axis=0).astype(np.int32)
+    return jnp.asarray(bucket), jnp.asarray(hist)

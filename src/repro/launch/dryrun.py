@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production meshes, record memory/cost analysis and the
+collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out-dir ...]
+
+One process per cell is recommended (``--all`` spawns subprocesses) so a
+single XLA OOM/compile failure cannot take down the sweep and per-cell
+peak RSS stays bounded on this 1-core/35 GB container.
+"""
+import argparse                      # noqa: E402
+import json                          # noqa: E402
+import re                            # noqa: E402
+import subprocess                    # noqa: E402
+import sys                           # noqa: E402
+import time                          # noqa: E402
+from pathlib import Path             # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "launch_results"
+
+# v5e constants for the roofline terms (per chip)
+PEAK_FLOPS = 197e12            # bf16
+HBM_BW = 819e9                 # bytes/s
+ICI_BW_LINK = 50e9             # bytes/s per link; v5e: 4 links usable/chip
+ICI_LINKS = 4
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def parse_collectives(hlo: str):
+    """Sum wire bytes per collective kind from post-SPMD HLO text.
+
+    Conventions (ring algorithms, per participating device):
+      all-gather: result bytes (each device receives ~full result)
+      all-reduce: 2 × operand bytes (reduce-scatter + all-gather phases)
+      reduce-scatter / all-to-all / collective-permute: operand≈result bytes
+    """
+    sums = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+            "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(sums, 0)
+    for m in _COLL_RE.finditer(hlo):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d.strip():
+                nbytes *= int(d)
+        mult = 2 if kind == "all-reduce" else 1
+        sums[kind] += nbytes * mult
+        counts[kind] += 1
+    return sums, counts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             variant: str = "base"):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if variant != "base":
+        cfg = apply_variant(cfg, variant)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "multi_pod": multi_pod, "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return _dump(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(jnp.prod(jnp.asarray(list(mesh.shape.values()))))
+    rec["mesh"] = dict(mesh.shape)
+    t0 = time.time()
+    try:
+        with mesh:
+            if shape.kind == "train":
+                (pshape, oshape), (pshard, oshard) = S.abstract_state(cfg, mesh)
+                step_fn, _ = S.make_train_step(cfg, mesh)
+                state_in = S.TrainState(
+                    S.sharded_specs(pshape, pshard),
+                    S.sharded_specs(oshape, oshard),
+                    jax.ShapeDtypeStruct((), jnp.int32))
+                batch = S.input_specs(cfg, shape, mesh)
+                jitted = jax.jit(step_fn, donate_argnums=(0,))
+                lowered = jitted.lower(state_in, batch)
+            elif shape.kind == "prefill":
+                pshape, pshard = S.abstract_state(cfg, mesh, with_opt=False)
+                step_fn = S.make_prefill_step(cfg, mesh)
+                lowered = jax.jit(step_fn).lower(
+                    S.sharded_specs(pshape, pshard),
+                    S.input_specs(cfg, shape, mesh))
+            else:  # decode
+                pshape, pshard = S.abstract_state(cfg, mesh, with_opt=False)
+                step_fn = S.make_serve_step(cfg, mesh)
+                lowered = jax.jit(step_fn, donate_argnums=(1,)).lower(
+                    S.sharded_specs(pshape, pshard),
+                    S.cache_specs(cfg, shape, mesh),
+                    S.input_specs(cfg, shape, mesh))
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (XLA cost_analysis counts scan bodies
+        # once — see hlo_cost.py); keep XLA's numbers for reference.
+        from repro.launch import hlo_cost
+        hc = hlo_cost.analyze(hlo)
+        colls = hc["collective_bytes"]
+        coll_counts = hc["collective_counts"]
+        flops = float(hc["flops"])
+        # memory term uses the TPU-fused lower bound (dots/copies/slices/
+        # collectives); the CPU fusion-boundary upper bound is reported too.
+        bytes_hbm = float(hc["bytes_min"])
+        bytes_upper = float(hc["bytes"])
+        coll_bytes = float(sum(colls.values()))
+        t_comp = flops / PEAK_FLOPS
+        t_mem = bytes_hbm / HBM_BW
+        t_coll = coll_bytes / (ICI_LINKS * ICI_BW_LINK)
+        terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+        dominant = max(terms, key=terms.get)
+        model_flops = _model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+            memory={k: int(getattr(mem, k)) for k in
+                    ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "temp_size_in_bytes")
+                    if hasattr(mem, k)},
+            hlo_flops_per_device=flops,
+            hlo_bytes_per_device=bytes_hbm,
+            hlo_bytes_upper_per_device=bytes_upper,
+            xla_cost_flops=float(cost.get("flops", 0.0)),
+            xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+            unknown_trip_counts=hc["unknown_trip_counts"],
+            collective_bytes_per_device=colls,
+            collective_counts=coll_counts,
+            roofline=terms, dominant=dominant,
+            model_flops_global=model_flops,
+            useful_flops_ratio=(model_flops / (flops * n_chips)
+                                if flops else None),
+            n_chips=n_chips,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}"[:2000])
+    return _dump(rec, out_dir)
+
+
+def _model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = new tokens only."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch          # one token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)
+
+
+def apply_variant(cfg, variant: str):
+    """§Perf variants (hill-climbing knobs), applied over the base config."""
+    import dataclasses
+    mods = {
+        "banded_swa": dict(swa_banded=True),
+        "remat_dots": dict(remat="dots"),
+        "remat_none": dict(remat="none"),
+        "moe_dense": dict(moe_impl="dense"),
+        "moe_sort": dict(moe_impl="sort"),
+        "moe_tp_fused": dict(moe_tp_fused=True),
+        "prefill_last": dict(prefill_last_only=True),
+        "moe_tp_fused_remat_dots": dict(moe_tp_fused=True, remat="dots"),
+        "prefill_last_banded": dict(prefill_last_only=True, swa_banded=True),
+        "seq_parallel": dict(act_seq_shard=True),
+        "seq_parallel_tp_moe": dict(act_seq_shard=True, moe_tp_fused=True),
+        "context_parallel": dict(attn_context_parallel=True),
+        "ddp": dict(ddp=True),
+        "ddp_dots": dict(ddp=True, remat="dots"),
+        "cp_last": dict(attn_context_parallel=True, prefill_last_only=True),
+    }[variant]
+    return dataclasses.replace(cfg, **mods)
+
+
+def _dump(rec, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = "pod2" if rec["multi_pod"] else "pod1"
+    name = f"{rec['arch']}__{rec['shape']}__{tag}"
+    if rec.get("variant", "base") != "base":
+        name += f"__{rec['variant']}"
+    path = out_dir / f"{name}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = rec.get("dominant", rec.get("reason", rec.get("error", "")))
+    print(f"[dryrun] {name}: {status} ({str(extra)[:120]})", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+    out_dir = Path(args.out_dir)
+
+    if args.all:
+        from repro.configs import SHAPES, list_archs
+        cells = [(a, s, mp) for a in list_archs() for s in SHAPES
+                 for mp in ((False, True) if args.both_meshes
+                            else (args.multi_pod,))]
+        failures = 0
+        for arch, shp, mp in cells:
+            tag = "pod2" if mp else "pod1"
+            fname = out_dir / f"{arch}__{shp}__{tag}.json"
+            if args.skip_existing and fname.exists() and \
+                    json.loads(fname.read_text()).get("status") in ("ok", "skipped"):
+                print(f"[dryrun] skip existing {fname.name}", flush=True)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shp, "--out-dir", str(out_dir)]
+            if mp:
+                cmd.append("--multi-pod")
+            r = subprocess.run(cmd, check=False)
+            failures += r.returncode != 0
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, out_dir,
+                   args.variant)
+    if rec["status"] == "error":
+        print(rec["error"], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

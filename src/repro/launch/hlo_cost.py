@@ -1,0 +1,278 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) visits
+every computation once: a ``while`` body that a scanned 96-layer model
+executes 96 times is counted *once*, so FLOPs/bytes/collective traffic of
+scan-based models are wildly understated.  This module re-derives the three
+roofline inputs by walking the HLO computation graph bottom-up and scaling
+``while`` bodies by their ``known_trip_count`` backend_config (emitted by
+XLA for lax.scan loops).
+
+Counting conventions (per device — the module is the per-device program):
+  flops:   dot = 2·(result elems)·(contraction size); elementwise/reduce =
+           result elems (dots dominate every model here)
+  bytes:   Σ operand sizes + result size per instruction, fusion-internal
+           instructions excluded (same convention as XLA bytes-accessed on
+           the post-fusion module)
+  colls:   wire bytes per collective kind; all-reduce counted 2× operand
+           (reduce-scatter + all-gather phases of a ring)
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[\\"\s:{]+n[\\"\s:]+(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def _shape_bytes_elems(type_str: str):
+    """Total (bytes, elems) over a possibly-tuple type string."""
+    bytes_, elems = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return bytes_, elems
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0       # upper bound: every fusion-boundary tensor
+    bytes_min: float = 0.0   # lower bound: dots/copies/collectives/slices
+                             # only — models a perfectly-fused TPU pipeline
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    unknown_trip: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_min += other.bytes_min * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+        self.unknown_trip += other.unknown_trip
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, list] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._cost_memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        comment = re.compile(r"/\*.*?\*/")
+        for raw in text.splitlines():
+            line = comment.sub("", raw)
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            # computation header: "%name (args) -> type {"  /  "ENTRY %name ..."
+            if s.endswith("{") and "->" in s and "=" not in s.split("->")[0]:
+                is_entry = s.startswith("ENTRY")
+                name = s.split()[1 if is_entry else 0].lstrip("%")
+                name = name.split("(")[0]
+                cur = name
+                self.computations[cur] = []
+                if is_entry:
+                    self.entry = cur
+                continue
+            if s == "}":
+                cur = None
+                continue
+            if cur is not None:
+                self.computations[cur].append(line)
+
+    # -- per-computation cost ------------------------------------------------
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._cost_memo:
+            return self._cost_memo[comp]
+        self._cost_memo[comp] = Cost()          # break cycles defensively
+        total = Cost()
+        shapes: Dict[str, str] = {}
+        for line in self.computations.get(comp, ()):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            shapes[name] = type_str
+            total.add(self._instr_cost(opcode, type_str, rest, shapes))
+        self._cost_memo[comp] = total
+        return total
+
+    def _instr_cost(self, opcode: str, type_str: str, rest: str,
+                    shapes: Dict[str, str]) -> Cost:
+        c = Cost()
+        res_bytes, res_elems = _shape_bytes_elems(type_str)
+        op = opcode.replace("-start", "")
+
+        if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all", "partition-id", "replica-id",
+                  "copy-start", "copy-done", "all-reduce-done",
+                  "all-gather-done", "all-to-all-done",
+                  "collective-permute-done", "opt-barrier"):
+            return c
+
+        if op in ("dynamic-update-slice", "dynamic-slice"):
+            # in-place update / windowed read: traffic is the slice, not the
+            # whole buffer (otherwise scan grad-accumulation counts the full
+            # parameter stack per layer iteration)
+            args = rest.split(")")[0] if ")" in rest else rest
+            names = _OPERAND_RE.findall(args)
+            if op == "dynamic-slice":
+                c.bytes += 2 * res_bytes
+            else:
+                upd = names[1] if len(names) > 1 else None
+                ub = _shape_bytes_elems(shapes.get(upd, ""))[0] if upd else 0
+                c.bytes += 2 * ub
+            c.bytes_min += c.bytes
+            return c
+
+        # operand bytes
+        opnd_bytes = 0
+        args = rest.split(")")[0] if ")" in rest else rest
+        for o in _OPERAND_RE.findall(args):
+            if o in shapes:
+                b, _ = _shape_bytes_elems(shapes[o])
+                opnd_bytes += b
+
+        if op in COLLECTIVES:
+            wire = res_bytes if op == "all-gather" else max(opnd_bytes, res_bytes)
+            mult = 2 if op == "all-reduce" else 1
+            c.coll_bytes[op] += wire * mult
+            c.coll_count[op] += 1
+            c.bytes += opnd_bytes + res_bytes
+            c.bytes_min += opnd_bytes + res_bytes
+            return c
+
+        if op == "while":
+            body = cond = None
+            mb = re.search(r"body=%?([\w\.\-]+)", rest)
+            mc = _COND_RE.search(rest)
+            body = mb.group(1) if mb else None
+            cond = mc.group(1) if mc else None
+            mt = _TRIP_RE.search(rest)
+            trips = int(mt.group(1)) if mt else 1
+            if not mt:
+                c.unknown_trip += 1
+            if body:
+                c.add(self.cost_of(body), trips)
+            if cond:
+                c.add(self.cost_of(cond), trips + 1)
+            return c
+
+        if op == "conditional":
+            mb = _BRANCHES_RE.search(rest)
+            if mb:
+                branches = [b.strip().lstrip("%") for b in
+                            mb.group(1).split(",")]
+                costs = [self.cost_of(b) for b in branches if b]
+                if costs:
+                    c.add(max(costs, key=lambda x: x.flops))
+            c.bytes += opnd_bytes + res_bytes
+            return c
+
+        if op in ("fusion", "call", "custom-call", "map", "reduce",
+                  "reduce-window", "sort", "scatter", "select-and-scatter"):
+            mcalls = _CALLS_RE.search(rest)
+            c.bytes += opnd_bytes + res_bytes
+            if op == "fusion" and mcalls:
+                inner = self.cost_of(mcalls.group(1))
+                c.flops += inner.flops            # bytes stay fusion-boundary
+                c.add(Cost(coll_bytes=inner.coll_bytes,
+                           coll_count=inner.coll_count))
+            elif op in ("call", "map") and mcalls:
+                c.add(self.cost_of(mcalls.group(1)))
+            elif op == "sort":
+                import math
+                c.flops += res_elems * max(1.0, math.log2(max(res_elems, 2)))
+            else:
+                c.flops += res_elems
+            return c
+
+        if op == "dot":
+            k = 1
+            mcon = _CONTRACT_RE.search(rest)
+            lhs = _OPERAND_RE.findall(rest.split(")")[0])
+            if mcon and lhs and lhs[0] in shapes:
+                sm = _SHAPE_RE.search(shapes[lhs[0]])
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d.strip()]
+                    for ci in mcon.group(1).split(","):
+                        if ci.strip() and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+            c.flops += 2.0 * res_elems * k
+            c.bytes += opnd_bytes + res_bytes
+            c.bytes_min += opnd_bytes + res_bytes
+            return c
+
+        if op == "convolution":
+            c.flops += 2.0 * res_elems * max(1, opnd_bytes // max(res_bytes, 1))
+            c.bytes += opnd_bytes + res_bytes
+            c.bytes_min += opnd_bytes + res_bytes
+            return c
+
+        if op == "copy":
+            c.bytes += opnd_bytes + res_bytes
+            c.bytes_min += opnd_bytes + res_bytes
+            return c
+
+        # elementwise & everything else
+        c.flops += res_elems
+        c.bytes += opnd_bytes + res_bytes
+        return c
+
+    def entry_cost(self) -> Cost:
+        entry = self.entry
+        if entry is None:
+            for name in self.computations:
+                if name.startswith(("main", "jit_")) or ".main" in name:
+                    entry = name
+                    break
+        if entry is None and self.computations:
+            entry = next(iter(self.computations))
+        return self.cost_of(entry) if entry else Cost()
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.cost_of(entry) if entry else mod.entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "bytes_min": c.bytes_min,
+        "collective_bytes": dict(c.coll_bytes),
+        "collective_counts": dict(c.coll_count),
+        "unknown_trip_counts": c.unknown_trip,
+    }

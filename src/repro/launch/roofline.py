@@ -1,0 +1,65 @@
+"""Aggregate the per-cell dry-run records into the §Roofline table.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--dir launch_results]
+                                                 [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+HW = "v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 4×50 GB/s ICI links per chip"
+
+
+def load(dir_: Path, pod: str = "pod1", variant: str = "base"):
+    recs = []
+    for f in sorted(dir_.glob(f"*__{pod}*.json")):
+        r = json.loads(f.read_text())
+        if r.get("variant", "base") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return None
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | ERROR | | | | | |"
+    t = r["roofline"]
+    dom = r["dominant"].replace("_s", "")
+    step = max(t.values())
+    frac = t["compute_s"] / step if step else 0.0
+    ratio = r.get("useful_flops_ratio")
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | {dom} | "
+            f"{ratio:.2f} | {frac:.1%} |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(Path(__file__).resolve().parents[3]
+                                         / "launch_results"))
+    ap.add_argument("--pod", default="pod1")
+    args = ap.parse_args(argv)
+    recs = load(Path(args.dir), args.pod)
+    print(f"Roofline terms per (arch × shape), single-pod 256 chips ({HW})\n")
+    print("| arch | shape | T_comp [s] | T_mem [s] | T_coll [s] | dominant |"
+          " 6ND/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    skips = []
+    for r in recs:
+        row = fmt_row(r)
+        if row is None:
+            skips.append((r["arch"], r["shape"], r["reason"]))
+        else:
+            print(row)
+    if skips:
+        print("\nSkipped cells (per brief):")
+        for a, s, why in skips:
+            print(f"  - {a} × {s}: {why}")
+
+
+if __name__ == "__main__":
+    main()

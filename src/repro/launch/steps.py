@@ -1,0 +1,174 @@
+"""train_step / serve_step / prefill_step factories + input_specs.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, zero allocation) — the
+dry-run lowers against these; train.py/serve.py feed real arrays of the
+same shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import data_axes_of, make_shardings
+from repro.models import transformer as T
+from repro.optim import cosine_schedule, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _dp_for_batch(mesh, B: int, cfg=None):
+    if not mesh:
+        return ()
+    import numpy as _np
+    from repro.dist.sharding import batch_axes_of
+    if cfg is not None:
+        return batch_axes_of(mesh, cfg, batch=B)
+    dp = data_axes_of(mesh)
+    sz = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    return dp if dp and B % sz == 0 else ()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the step inputs of (arch × shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_for_batch(mesh, B, cfg)
+    bs = (lambda *s: NamedSharding(mesh, P(dp, *s))) if mesh else \
+        (lambda *s: None)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, bs(None, None)),
+                    "labels": _sds((B, S, cfg.n_codebooks), jnp.int32, bs(None, None))}
+        out = {"tokens": _sds((B, S), jnp.int32, bs(None))}
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), jnp.int32, bs(None))
+        return out
+    # decode: one new token; the KV cache / state is part of the step inputs
+    if cfg.family == "audio":
+        return {"embeds": _sds((B, 1, cfg.d_model), jnp.bfloat16, bs(None, None))}
+    return {"tokens": _sds((B, 1), jnp.int32, bs(None))}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh]):
+    """ShapeDtypeStructs + shardings for the decode state."""
+    B, S = shape.global_batch, shape.seq_len
+    state_shape = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, S, jnp.bfloat16))
+    if mesh is None:
+        return state_shape
+    dp = _dp_for_batch(mesh, B)
+    msize = mesh.shape.get("model", 1)
+
+    def spec_of(leaf):
+        shp = leaf.shape
+        # stacked (L, B, ...) tensors: shard B over data; prefer sharding the
+        # head/heads dim over model when divisible, else the length dim.
+        if len(shp) >= 3:
+            rest = [None] * (len(shp) - 2)
+            # KV cache (L,B,S,KV,hd) / ssm state (L,B,H,P,N) / conv (L,B,k,C)
+            if len(shp) == 5 and shp[3] % msize == 0:      # KV heads
+                rest[1] = "model"
+            elif len(shp) == 5 and shp[2] % msize == 0:    # cache length / H
+                rest[0] = "model"
+            elif len(shp) == 4 and shp[2] % msize == 0:
+                rest[0] = "model"
+            return NamedSharding(mesh, P(None, dp, *rest))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(
+        lambda leaf: _sds(leaf.shape, leaf.dtype, spec_of(leaf)), state_shape)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], *,
+                    peak_lr: float = 3e-4, warmup: int = 200,
+                    total: int = 10000):
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+    dax = data_axes_of(mesh) if mesh else ("data",)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        lr = cosine_schedule(state.step, peak_lr=peak_lr, warmup=warmup,
+                             total=total)
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, batch, cfg, mesh, dax))(state.params)
+        new_params, new_opt = opt_update(grads, state.opt, state.params, lr=lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return (TrainState(new_params, new_opt, state.step + 1),
+                {"loss": loss, "lr": lr, "grad_norm": gnorm})
+
+    return train_step, opt_init
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    dax = data_axes_of(mesh) if mesh else ("data",)
+
+    def serve_step(params, dstate, inputs):
+        logits, new_state = T.decode_step(params, dstate, inputs, cfg, mesh,
+                                          dax)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, new_state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    dax = data_axes_of(mesh) if mesh else ("data",)
+
+    def prefill_step(params, inputs):
+        logits, _ = T.forward(params, inputs, cfg, mesh, dax,
+                              last_only=getattr(cfg, "prefill_last_only",
+                                                False))
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract state + shardings (used by dryrun and train init)
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(cfg: ModelConfig, mesh: Optional[Mesh], *,
+                   with_opt: bool = True, seed: int = 0):
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(seed), cfg))
+    pshard = make_shardings(params_shape, cfg, mesh) if mesh else None
+    if not with_opt:
+        return params_shape, pshard
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    oshard = make_shardings(opt_shape, cfg, mesh) if mesh else None
+    return (params_shape, opt_shape), (pshard, oshard)
+
+
+def sharded_specs(shape_tree, shard_tree):
+    if shard_tree is None:
+        return shape_tree
+    return jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                        shape_tree, shard_tree)

@@ -1,0 +1,118 @@
+"""End-to-end training driver.
+
+Runs real steps on the available devices (CPU here; the same code path
+drives TPU pods — only the mesh shape changes).  Integrates the full
+runtime: sharded state, deterministic data pipeline, async checkpointing,
+crash recovery, straggler watchdog, and (for small replicated models) the
+int8 compressed gradient all-reduce.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --smoke --steps 50 --mesh 1,2 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, smoke_variant
+from repro.data.pipeline import TokenPipeline
+from repro.dist.sharding import data_axes_of, make_shardings
+from repro.launch import steps as S
+from repro.launch.mesh import make_mesh_shape
+from repro.models import transformer as T
+from repro.runtime import CheckpointManager, StepWatchdog, run_with_restarts
+
+
+def build_everything(cfg, mesh, batch, seq, seed=0):
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    pshard = make_shardings(jax.eval_shape(lambda: params), cfg, mesh)
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, pshard)
+    step_fn, opt_init = S.make_train_step(cfg, mesh)
+    opt = opt_init(params)
+    oshard = make_shardings(jax.eval_shape(lambda: opt), cfg, mesh)
+    opt = jax.tree.map(lambda x, s: jax.device_put(x, s), opt, oshard)
+    state = S.TrainState(params, opt, jnp.zeros((), jnp.int32))
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+    return state, jitted, (pshard, oshard)
+
+
+def train(cfg, mesh, *, steps: int, batch: int, seq: int,
+          ckpt_dir=None, ckpt_every: int = 20, log_every: int = 10,
+          crash_at=None, logger=print):
+    pipe = TokenPipeline(cfg.vocab, batch, seq, family=cfg.family,
+                         d_model=cfg.d_model, n_codebooks=cfg.n_codebooks)
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    watchdog = StepWatchdog()
+    pending_fault = [crash_at]
+
+    def run(start_step: int) -> int:
+        state, jitted, shards = build_everything(cfg, mesh, batch, seq)
+        if mgr and mgr.latest_step() is not None:
+            state = mgr.restore(state)
+            logger(f"[train] restored step {int(state.step)}")
+        losses = []
+        with mesh:
+            for step in range(int(state.step), steps):
+                if pending_fault[0] is not None and step == pending_fault[0]:
+                    pending_fault[0] = None      # fault fires once
+                    raise RuntimeError(f"injected fault at step {step}")
+                watchdog.start()
+                batch_np = pipe.batch_at(step)
+                state, metrics = jitted(state, batch_np)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                slow = watchdog.stop(step)
+                if slow:
+                    logger(f"[watchdog] straggler step {step}: "
+                           f"{watchdog.times[-1]:.3f}s")
+                if step % log_every == 0:
+                    logger(f"[train] step {step} loss {loss:.4f} "
+                           f"lr {float(metrics['lr']):.2e} "
+                           f"gnorm {float(metrics['grad_norm']):.3f}")
+                if mgr and (step + 1) % ckpt_every == 0:
+                    mgr.save_async(step + 1, state)
+        if mgr:
+            mgr.wait()
+            mgr.save(steps, state)
+        return steps, losses
+
+    if mgr:
+        result = run_with_restarts(lambda s: run(s), ckpt_manager=mgr)
+    else:
+        result = run(0)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="1,2",
+                    help="data,model axis sizes (CPU devices)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    dd, mm = (int(x) for x in args.mesh.split(","))
+    mesh = make_mesh_shape((dd, mm), ("data", "model"))
+    t0 = time.time()
+    final, losses = train(cfg, mesh, steps=args.steps, batch=args.batch,
+                          seq=args.seq, ckpt_dir=args.ckpt_dir)
+    dt = time.time() - t0
+    print(f"[train] done: {final} steps in {dt:.1f}s; "
+          f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

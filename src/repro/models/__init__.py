@@ -1,0 +1,7 @@
+"""Model substrate: transformer / MoE / SSM / hybrid architectures.
+
+Functional style: params are plain pytrees (dicts of jnp arrays), each
+module exposes ``init_*`` and ``apply`` functions.  All dtypes are explicit
+(bf16 activations/weights, f32 norms & router logits) — the sorting core
+enables jax_enable_x64 and model code must be unaffected by it.
+"""

@@ -1,0 +1,260 @@
+"""GQA attention: flash-style chunked prefill (online softmax), sliding
+window, qk-norm, and single-token decode against a KV cache.
+
+The chunked path is the memory-hygiene requirement for the 32k prefill
+shapes: a (B,H,S,S) score tensor would be ~TBs; scanning KV blocks with a
+running (max, denominator) keeps activations at O(S·blk) per head.
+``window`` limits attention to the last W positions (mixtral SWA); the
+baseline computes all causal blocks and masks — block *skipping* for SWA is
+a §Perf optimization (banded=True).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, init_rms, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = float(1.0 / np.sqrt(d))
+    p = {"wq": jax.random.normal(kq, (d, n_heads * head_dim), dtype) * s,
+         "wk": jax.random.normal(kk, (d, n_kv * head_dim), dtype) * s,
+         "wv": jax.random.normal(kv, (d, n_kv * head_dim), dtype) * s,
+         "wo": jax.random.normal(ko, (n_heads * head_dim, d), dtype)
+               * float(1.0 / np.sqrt(n_heads * head_dim))}
+    if qk_norm:
+        p["q_norm"] = init_rms(head_dim)
+        p["k_norm"] = init_rms(head_dim)
+    return p
+
+
+def _qkv(x, p, cfg, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention(x: jax.Array, p: dict, cfg, *, block: int = 1024,
+              banded: Optional[bool] = None, mesh=None) -> jax.Array:
+    """Causal self-attention for training/prefill.  x: (B,S,D)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _qkv(x, p, cfg, positions)
+    window = cfg.sliding_window
+    if banded is None:
+        banded = bool(window) and getattr(cfg, "swa_banded", False)
+
+    if getattr(cfg, "attn_context_parallel", False) and mesh is not None \
+            and S > block:
+        out = _attend_cp(q, k, v, H // KV, window, block, banded, mesh)
+    elif S <= block:
+        out = _attend_dense(q, k, v, H // KV, window)
+    else:
+        out = _attend_chunked(q, k, v, H // KV, window, block, banded)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def _attend_cp(q, k, v, n_rep, window, block, banded, mesh):
+    """Context-parallel flash attention (§Perf): the query-block dim shards
+    over the model axis (works for ANY head count — the fix for archs whose
+    heads don't divide the TP degree, where GSPMD otherwise head-dim-shards
+    the contraction and all-reduces every score block); K/V replicate over
+    model; one scan over KV blocks with a fully vectorized query dim.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import data_axes_of
+    B, S, H, hd = q.shape
+    nq = S // block
+    dp = data_axes_of(mesh) if B % max(
+        1, int(np.prod([mesh.shape[a] for a in data_axes_of(mesh)]))) == 0 \
+        else ()
+    msize = mesh.shape.get("model", 1)
+    cp = "model" if nq % msize == 0 else None
+    wsc = jax.lax.with_sharding_constraint
+    qb = q.reshape(B, nq, block, H, hd)
+    qb = wsc(qb, NamedSharding(mesh, P(dp, cp, None, None, None)))
+    k = wsc(k, NamedSharding(mesh, P(dp, None, None, None)))
+    v = wsc(v, NamedSharding(mesh, P(dp, None, None, None)))
+
+    def kv_step(carry, kj):
+        acc, m, denom = carry                       # (B,nq,blk,H,hd) f32 ...
+        kb = jax.lax.dynamic_slice_in_dim(k, kj * block, block, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, kj * block, block, 1)
+        kb = _repeat_kv(kb, n_rep)
+        vb = _repeat_kv(vb, n_rep)
+        s = jnp.einsum("bnqhd,bkhd->bnhqk", qb, kb).astype(jnp.float32)
+        s = s * float(1.0 / np.sqrt(hd))
+        qpos = (jnp.arange(nq)[:, None] * block
+                + jnp.arange(block)[None, :])       # (nq, blk)
+        kpos = kj * block + jnp.arange(block)
+        mask = kpos[None, None, :] <= qpos[:, :, None]
+        if window:
+            mask &= kpos[None, None, :] > qpos[:, :, None] - window
+        s = jnp.where(mask[None, :, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        scale = jnp.exp(m - m_new)
+        pr = jnp.exp(s - m_new[..., None])
+        denom = denom * scale + jnp.sum(pr, axis=-1)
+        acc = acc * scale.transpose(0, 1, 3, 2)[..., None] + jnp.einsum(
+            "bnhqk,bkhd->bnqhd", pr.astype(qb.dtype), vb).astype(jnp.float32)
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((B, nq, block, H, hd), jnp.float32)
+    m0 = jnp.full((B, nq, H, block), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, nq, H, block), jnp.float32)
+    (acc, m, denom), _ = jax.lax.scan(kv_step, (acc0, m0, d0), jnp.arange(nq))
+    out = acc / jnp.maximum(denom.transpose(0, 1, 3, 2)[..., None], 1e-30)
+    out = wsc(out, NamedSharding(mesh, P(dp, cp, None, None, None)))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _attend_dense(q, k, v, n_rep, window):
+    B, S, H, hd = q.shape
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * float(1.0 / np.sqrt(hd))
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = ki <= qi
+    if window:
+        mask &= ki > qi - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _attend_chunked(q, k, v, n_rep, window, block, banded):
+    """Online-softmax over KV blocks; optionally skip blocks outside the
+    sliding-window band (the §Perf SWA optimization)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    nq = S // block
+    q = q.reshape(B, nq, block, H, hd)
+
+    def per_qblock(qi, qb):
+        # qb: (B, block, H, hd); causal ⇒ only KV blocks ≤ qi matter.
+        if banded and window:
+            nkv = min(nq, window // block + 2)
+        else:
+            nkv = nq
+
+        def kv_step(carry, kj):
+            acc, m, denom = carry
+            if banded and window:
+                # absolute KV block index: the band [qi-nkv+1 .. qi]
+                kb_idx = qi - (nkv - 1) + kj
+            else:
+                kb_idx = kj
+            kb_idx_c = jnp.clip(kb_idx, 0, nq - 1)
+            kb = jax.lax.dynamic_slice_in_dim(k, kb_idx_c * block, block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kb_idx_c * block, block, 1)
+            kb = _repeat_kv(kb, n_rep)
+            vb = _repeat_kv(vb, n_rep)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            s = s * float(1.0 / np.sqrt(hd))
+            qpos = qi * block + jnp.arange(block)[:, None]
+            kpos = kb_idx_c * block + jnp.arange(block)[None, :]
+            mask = (kpos <= qpos) & (kb_idx >= 0)
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            scale = jnp.exp(m - m_new)
+            pr = jnp.exp(s - m_new[..., None])
+            denom = denom * scale + jnp.sum(pr, axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", pr.astype(qb.dtype), vb).astype(jnp.float32)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, H, block, hd), jnp.float32)
+        m0 = jnp.full((B, H, block), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, H, block), jnp.float32)
+        kj_hi = nkv if (banded and window) else (qi + 1)
+        # scan over a static-length block range; mask handles the remainder
+        def masked_step(carry, kj):
+            pred = kj < kj_hi if not (banded and window) else kj < nkv
+            new_carry, _ = kv_step(carry, kj)
+            carry = jax.tree.map(
+                lambda n, c: jnp.where(pred, n, c), new_carry, carry)
+            return carry, None
+
+        (acc, m, denom), _ = jax.lax.scan(
+            masked_step, (acc0, m0, d0), jnp.arange(nkv))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(qb.dtype)   # (B, block, H, hd)
+
+    out = jax.lax.map(lambda args: per_qblock(*args),
+                      (jnp.arange(nq), q.transpose(1, 0, 2, 3, 4)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+# --- decode ----------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, KV, hd)
+    v: jax.Array
+    pos: jax.Array        # () int32 — next write position (same for batch)
+
+
+def init_cache(B: int, S_max: int, cfg, dtype) -> KVCache:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(k=jnp.zeros((B, S_max, KV, hd), dtype),
+                   v=jnp.zeros((B, S_max, KV, hd), dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def decode_attention(x: jax.Array, p: dict, cfg, cache: KVCache):
+    """One-token decode: x (B,1,D); returns (out (B,1,D), new cache)."""
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S_max = cache.k.shape[1]
+    window = cfg.sliding_window
+    # rotary position = absolute position; cache slot wraps for SWA ring
+    abs_pos = cache.pos
+    slot = abs_pos % S_max if window else abs_pos
+    q, k, v = _qkv(x, p, cfg, jnp.broadcast_to(abs_pos, (B, 1)))
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    kk = _repeat_kv(ck, H // KV)
+    vv = _repeat_kv(cv, H // KV)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) \
+        * float(1.0 / np.sqrt(hd))
+    kpos = jnp.arange(S_max)
+    valid = kpos <= abs_pos if not window \
+        else (kpos[None, :] >= 0) & jnp.ones((1, S_max), bool)   # ring: all slots ≤ window
+    if window:
+        filled = jnp.minimum(abs_pos + 1, S_max)
+        valid = kpos[None, :] < filled
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    else:
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vv)
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, KVCache(ck, cv, abs_pos + 1)

@@ -1,0 +1,90 @@
+"""Shared layers: RMSNorm, RoPE, MLPs, embeddings, norms-with-sharding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_rms(d: int) -> jax.Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+# --- RoPE ------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))            # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs ------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, gated: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d))
+    s_out = float(1.0 / np.sqrt(f))
+    p = {"up": jax.random.normal(k1, (d, f), dtype) * s_in,
+         "down": jax.random.normal(k2, (f, d), dtype) * s_out}
+    if gated:
+        p["gate"] = jax.random.normal(k3, (d, f), dtype) * s_in
+    return p
+
+
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    h = x @ p["up"]
+    if act == "silu":                        # gated SiLU (llama family)
+        h = jax.nn.silu(x @ p["gate"]) * h
+    elif act == "relu2":                     # squared ReLU (nemotron)
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ p["down"]
+
+
+# --- Embedding / head ------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean next-token CE; logits (..., V) f32-accumulated, labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

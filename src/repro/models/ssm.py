@@ -1,0 +1,302 @@
+"""State-space blocks: Mamba2 (SSD, chunked) and RWKV6 (Finch, chunked WKV).
+
+Both use the chunked formulation: intra-chunk contributions are computed
+with dense (MXU-friendly) matmuls under a decay mask; inter-chunk state is
+carried by a scan over chunks.  Decode steps update an explicit recurrent
+state — these are the architectures for which ``long_500k`` runs (O(1)
+state instead of a 500k KV cache).
+
+Numerics: decays are accumulated in log space per chunk, so the largest
+exponent inside a chunk is bounded by chunk_len·max|log w| — safe in f32
+for the chunk sizes used here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+CHUNK = 128
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def init_mamba2(key, d: int, n_heads: int, d_state: int, dtype,
+                expand: int = 2, d_conv: int = 4) -> dict:
+    di = expand * d
+    hd = di // n_heads
+    ks = jax.random.split(key, 6)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * d_state + n_heads),
+                                     dtype) * s,
+        "conv": jax.random.normal(ks[1], (d_conv, di + 2 * d_state), dtype) * 0.1,
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * float(1.0 / np.sqrt(di)),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array          # (B, H, hd, N) f32
+    conv: jax.Array         # (B, d_conv-1, conv_dim)
+
+
+def _mamba_split(z, di, d_state, H):
+    x, zgate, B, C, dt = jnp.split(
+        z, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1)
+    return x, zgate, B, C, dt
+
+
+def mamba2(xin: jax.Array, p: dict, cfg) -> jax.Array:
+    """Train/prefill path, chunked SSD.  xin: (B,S,D)."""
+    Bsz, S, D = xin.shape
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    di = 2 * D
+    hd = di // H
+    z = xin @ p["in_proj"]
+    x, zgate, Bm, Cm, dt = _mamba_split(z, di, N, H)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    k = p["conv"].shape[0]
+    pad = jnp.zeros((Bsz, k - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_p = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xbc_p[:, i:i + S] * p["conv"][i][None, None] for i in range(k))
+    conv = jax.nn.silu(conv)
+    x, Bm, Cm = jnp.split(conv, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    xh = x.reshape(Bsz, S, H, hd)
+    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, chunk=min(CHUNK, S))
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(zgate.astype(jnp.float32)
+                                             ).astype(y.dtype)
+    return y @ p["out_proj"]
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int = CHUNK):
+    """SSD: y_t = C_t · h_t,  h_t = exp(A·dt_t)·h_{t-1} + dt_t·B_t x_t.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); B,C: (B,S,N) (single group).
+    Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = B.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+
+    da = dtc * A[None, None, None, :]                  # (B,nc,c,H) ≤ 0
+    cum = jnp.cumsum(da, axis=2)                       # inclusive
+    seg_sum = cum[:, :, -1:, :]                        # (B,nc,1,H)
+
+    xdt = (xc.astype(jnp.float32) * dtc[..., None])
+    # intra-chunk: y_i += Σ_{j≤i} C_i·B_j · exp(cum_i - cum_j) · dt_j x_j
+    scores = jnp.einsum("bnif,bnjf->bnij", Cc, Bc)     # (B,nc,c,c)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", scores, w, xdt)
+
+    # chunk states: G_n = Σ_j exp(seg_sum - cum_j) · B_j ⊗ dt_j x_j
+    wj = jnp.exp(seg_sum - cum)                        # (B,nc,c,H)
+    G = jnp.einsum("bnjf,bnjh,bnjhp->bnhpf", Bc, wj, xdt)   # (B,nc,H,P,N)
+
+    # carry states across chunks:  h_n = exp(seg_sum_n)·h_{n-1} + G_n
+    seg = jnp.exp(seg_sum[:, :, 0, :])                 # (B,nc,H)
+
+    def step(h, inp):
+        g, sg = inp
+        h = h * sg[:, :, None, None] + g
+        return h, h
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, hs = jax.lax.scan(step, h0,
+                         (G.transpose(1, 0, 2, 3, 4), seg.transpose(1, 0, 2)))
+    hs = hs.transpose(1, 0, 2, 3, 4)                   # (B,nc,H,P,N) inclusive
+    h_prev = jnp.concatenate([h0[:, None], hs[:, :-1]], axis=1)
+    # inter-chunk: y_i += C_i · exp(cum_i) · h_prev
+    y_inter = jnp.einsum("bnif,bnih,bnhpf->bnihp",
+                         Cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P).astype(x.dtype)
+    return y, hs[:, -1]
+
+
+def mamba2_decode(xin: jax.Array, p: dict, cfg, state: MambaState):
+    """One-token decode.  xin: (B,1,D)."""
+    Bsz, _, D = xin.shape
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    di = 2 * D
+    hd = di // H
+    z = xin[:, 0] @ p["in_proj"]
+    x, zgate, Bm, Cm, dt = _mamba_split(z, di, N, H)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)        # (B, convdim)
+    k = p["conv"].shape[0]
+    hist = jnp.concatenate([state.conv, xbc[:, None]], axis=1)  # (B,k,convdim)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv"])
+    conv = jax.nn.silu(conv)
+    x, Bm, Cm = jnp.split(conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(Bsz, H, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None])                       # (B,H)
+    upd = jnp.einsum("bhp,bf,bh->bhpf", xh, Bm.astype(jnp.float32), dt)
+    ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bf,bhpf->bhp", Cm.astype(jnp.float32), ssm)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, di)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(zgate.astype(jnp.float32)
+                                             ).astype(y.dtype)
+    out = (y.astype(xin.dtype) @ p["out_proj"])[:, None]
+    return out, MambaState(ssm=ssm, conv=hist[:, 1:])
+
+
+# ===========================================================================
+# RWKV6 (Finch): data-dependent per-channel decay
+# ===========================================================================
+
+
+def init_rwkv6(key, d: int, n_heads: int, dtype, lora: int = 64) -> dict:
+    ks = jax.random.split(key, 10)
+    s = float(1.0 / np.sqrt(d))
+    hd = d // n_heads
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),   # token-shift mix r,k,v,w,g
+        "wr": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "wg": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "wo": jax.random.normal(ks[4], (d, d), dtype) * s,
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": jax.random.normal(ks[5], (d, lora), dtype) * s,
+        "wB": jax.random.normal(ks[6], (lora, d), dtype) * float(1.0 / np.sqrt(lora)),
+        "u": jnp.zeros((n_heads, hd), jnp.float32),   # bonus for current token
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array          # (B, H, hd_k, hd_v) f32
+    last: jax.Array         # (B, D) previous token features
+
+
+def _rwkv_proj(x, xprev, p):
+    """Token-shift mixing + projections.  x: (B,S,D); xprev: shifted x."""
+    mu = p["mu"].astype(x.dtype)
+    xs = [xprev + mu[i][None, None] * (x - xprev) for i in range(5)]
+    r = xs[0] @ p["wr"]
+    k = xs[1] @ p["wk"]
+    v = xs[2] @ p["wv"]
+    lw = p["w0"] + jnp.tanh(xs[3].astype(jnp.float32) @ p["wA"].astype(jnp.float32)) \
+        @ p["wB"].astype(jnp.float32)
+    logw = -jnp.exp(lw)                                 # log decay ≤ 0, (B,S,D)
+    g = jax.nn.silu(xs[4] @ p["wg"])
+    return r, k, v, logw, g
+
+
+def rwkv6(xin: jax.Array, p: dict, cfg) -> jax.Array:
+    """Chunked WKV.  xin: (B,S,D)."""
+    B, S, D = xin.shape
+    H = cfg.n_heads
+    hd = D // H
+    xprev = jnp.concatenate([jnp.zeros_like(xin[:, :1]), xin[:, :-1]], axis=1)
+    r, k, v, logw, g = _rwkv_proj(xin, xprev, p)
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, H, hd).astype(jnp.float32)
+    lw = logw.reshape(B, S, H, hd)
+    y = _wkv_chunked(rh, kh, vh, lw, p["u"], chunk=min(CHUNK, S))
+    y = y.reshape(B, S, D)
+    y = rms_norm(y.astype(xin.dtype), p["ln_x"]) * g
+    return y @ p["wo"]
+
+
+def _wkv_chunked(r, k, v, lw, u, chunk: int = CHUNK):
+    """WKV recurrence, chunked:
+       S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ ;  y_t = rᵀ_t (S_{t-1} + diag(u)·k_t v_tᵀ)
+    r,k,v: (B,S,H,K);  lw: log decays (B,S,H,K);  u: (H,K)."""
+    B, S, H, K = r.shape
+    nc = S // chunk
+    rc = r.reshape(B, nc, chunk, H, K)
+    kc = k.reshape(B, nc, chunk, H, K)
+    vc = v.reshape(B, nc, chunk, H, K)
+    lwc = lw.reshape(B, nc, chunk, H, K)
+    cum = jnp.cumsum(lwc, axis=2)                       # inclusive decay sums
+    seg = cum[:, :, -1]                                 # (B,nc,H,K)
+
+    # intra-chunk: y_i = Σ_{j<i} (r_i·exp(cum_{i-1}-cum_j)·k_j) v_j + (r_i·u·k_i) v_i
+    cum_ex = cum - lwc                                  # exclusive prefix
+    ri = rc * jnp.exp(cum_ex)
+    kj = kc * jnp.exp(-cum)
+    att = jnp.einsum("bnihk,bnjhk->bnhij", ri, kj)
+    mask = jnp.tril(jnp.ones((chunk, chunk)), -1)
+    att = att * mask[None, None, None]
+    diag = jnp.einsum("bnihk,hk,bnihk->bnih", rc, u, kc)
+    y_intra = jnp.einsum("bnhij,bnjhv->bnihv", att, vc) \
+        + diag[..., None] * vc
+
+    # chunk state updates: G_n = Σ_j exp(seg - cum_j) k_j ⊗ v_j
+    wk = jnp.exp(seg[:, :, None] - cum) * kc            # (B,nc,c,H,K)
+    G = jnp.einsum("bnjhk,bnjhv->bnhkv", wk, vc)
+    segd = jnp.exp(seg)                                 # (B,nc,H,K)
+
+    def step(Sst, inp):
+        g, sd = inp
+        new = Sst * sd[..., None] + g
+        return new, Sst                                 # emit the *previous*
+
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    _, Sprev = jax.lax.scan(step, S0, (G.transpose(1, 0, 2, 3, 4),
+                                       segd.transpose(1, 0, 2, 3)))
+    Sprev = Sprev.transpose(1, 0, 2, 3, 4)              # (B,nc,H,K,V)
+    y_inter = jnp.einsum("bnihk,bnhkv->bnihv", rc * jnp.exp(cum_ex), Sprev)
+    return (y_intra + y_inter).reshape(B, S, H, K)
+
+
+def rwkv6_decode(xin: jax.Array, p: dict, cfg, state: RWKVState):
+    B, _, D = xin.shape
+    H = cfg.n_heads
+    hd = D // H
+    xprev = state.last[:, None].astype(xin.dtype)
+    r, k, v, logw, g = _rwkv_proj(xin, xprev, p)
+    rh = r.reshape(B, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, H, hd).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, hd))
+    u = p["u"]
+    y = jnp.einsum("bhk,bhkv->bhv", rh, state.wkv) \
+        + jnp.einsum("bhk,hk,bhk,bhv->bhv", rh, u, kh, vh)
+    wkv = state.wkv * w[..., None] + jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = y.reshape(B, D)
+    y = rms_norm(y.astype(xin.dtype), p["ln_x"]) * g[:, 0] if g.ndim == 3 else \
+        rms_norm(y.astype(xin.dtype), p["ln_x"]) * g
+    out = (y @ p["wo"])[:, None]
+    return out, RWKVState(wkv=wkv, last=xin[:, 0].astype(jnp.float32))
+
+
+def init_rwkv_channelmix(key, d: int, f: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"mu": jnp.full((2, d), 0.5, jnp.float32),
+            "wk": jax.random.normal(k1, (d, f), dtype) * float(1.0 / np.sqrt(d)),
+            "wv": jax.random.normal(k2, (f, d), dtype) * float(1.0 / np.sqrt(f))}
+
+
+def rwkv_channelmix(x: jax.Array, xprev: jax.Array, p: dict) -> jax.Array:
+    mu = p["mu"].astype(x.dtype)
+    xk = xprev + mu[0] * (x - xprev)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"]

@@ -1,0 +1,4 @@
+from .optimizers import (adamw_init, adamw_update, adafactor_init,  # noqa: F401
+                         adafactor_update, make_optimizer)
+from .schedule import cosine_schedule                               # noqa: F401
+from .grad_compress import compressed_psum, init_error_feedback    # noqa: F401

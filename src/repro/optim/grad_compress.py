@@ -1,0 +1,69 @@
+"""Gradient compression: int8 quantized reduce-scatter/all-gather psum with
+error feedback (1-bit-Adam-style residual correction).
+
+Replaces a full-precision all-reduce (4·B bytes on the wire) with an int8
+reduce-scatter + int8 all-gather (≈1·B each way ⇒ ~4× collective-byte
+reduction, visible to the HLO collective parser used by §Roofline).  Error
+feedback keeps the *accumulated* quantization error bounded, so SGD-style
+convergence is preserved (unit-tested on a quadratic in tests/).
+
+Used by the DDP training path (replicated params, ≤ few-B models); the
+FSDP/GSPMD path keeps XLA's fused reduce-scatter.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_mean(g: jax.Array, err: jax.Array, axis_name: str,
+                         p: int) -> Tuple[jax.Array, jax.Array]:
+    """Mean-all-reduce one gradient leaf with int8 wire format.
+
+    Call inside shard_map over ``axis_name``.  Returns (mean_grad, new_err).
+    """
+    flat = g.astype(jnp.float32).reshape(-1) + err.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    chunks = flat.reshape(p, -1)
+
+    q, scale = _quant(chunks)
+    err_new = (flat - (q.astype(jnp.float32) * scale).reshape(-1))[:n]
+    # reduce-scatter: all-to-all the int8 chunks (+ per-src scales), sum local
+    qs = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                            tiled=True).reshape(p, -1)
+    scales = jax.lax.all_gather(scale, axis_name)              # (p,)
+    mine = jnp.sum(qs.astype(jnp.float32) * scales[:, None], axis=0) / p
+    # all-gather the reduced shard, again int8 on the wire
+    q2, scale2 = _quant(mine)
+    allq = jax.lax.all_gather(q2, axis_name, tiled=True)       # (n+pad,) int8
+    alls = jax.lax.all_gather(scale2, axis_name)               # (p,)
+    shard_len = mine.shape[0]
+    out = (allq.astype(jnp.float32).reshape(p, shard_len)
+           * alls[:, None]).reshape(-1)[:n]
+    return out.reshape(g.shape), err_new.reshape(g.shape)
+
+
+def compressed_psum(grads, err_state, axis_name: str, p: int):
+    """Tree-mapped compressed mean-all-reduce."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    outs = [compressed_psum_mean(g, e, axis_name, p)
+            for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_g, new_e

@@ -1,0 +1,110 @@
+"""Optimizers: AdamW (≤100B configs) and Adafactor (factored second moment
+for the 100B+ dense models, where Adam's 12 bytes/param cannot fit
+256 × 16 GiB — DESIGN.md §6).  Pure pytree implementations; states inherit
+the parameter sharding (FSDP) via GSPMD."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** sf
+    c2 = 1.0 - b2 ** sf
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(new_m, new_v, step)
+
+
+class AdafactorState(NamedTuple):
+    vr: Any              # row statistics (or full v for <2D params)
+    vc: Any              # col statistics
+    step: jax.Array
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params),
+                          step=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr,
+                     decay=0.8, eps=1e-30, clip=1.0, weight_decay=0.0):
+    step = state.step + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps))
+            cfac = jax.lax.rsqrt(vc)
+            u = g * rfac[..., None] * cfac[..., None, :]
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(vr)
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    is_t = lambda x: isinstance(x, tuple)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    new_r = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    new_c = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+    return new_p, AdafactorState(new_r, new_c, step)
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

@@ -1,0 +1,11 @@
+"""LR schedules."""
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, s / jnp.maximum(warmup, 1))
+    t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, peak_lr * cos)

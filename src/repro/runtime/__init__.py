@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager            # noqa: F401
+from .failures import StepWatchdog, run_with_restarts  # noqa: F401

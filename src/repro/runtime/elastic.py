@@ -1,0 +1,85 @@
+"""Elastic scaling: plan and execute a topology change at restart time.
+
+The flow on a real cluster: the scheduler grants a different chip count →
+the launcher rebuilds the mesh (`plan_rescale`), re-derives the sharding
+rules (they reference axis *names* only — dist/sharding.py), and restores
+the latest checkpoint onto the new topology (`CheckpointManager.restore`
+with the new shardings).  The data pipeline is step-deterministic, so the
+batch stream continues exactly where it left off.
+
+Constraints encoded here:
+  * global batch must stay divisible by the new data extent (or the plan
+    reports the required gradient-accumulation factor);
+  * TP-sharded dims must divide the new model extent — the planner shrinks
+    the model axis until they do;
+  * pod axis absorbs whole-pod growth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_shape: Dict[str, int]
+    new_shape: Dict[str, int]
+    grad_accum: int                 # steps to accumulate if batch ∤ data
+    notes: Tuple[str, ...]
+
+    @property
+    def n_chips(self) -> int:
+        return int(np.prod(list(self.new_shape.values())))
+
+
+def plan_rescale(old_shape: Dict[str, int], n_chips: int, cfg,
+                 global_batch: int) -> RescalePlan:
+    """Choose a (pod, data, model) factorization of ``n_chips``.
+
+    Keeps the model extent as close to the old one as the architecture's
+    shardable dims allow, puts the rest in (pod ×) data.
+    """
+    notes = []
+    model_old = old_shape.get("model", 1)
+    # largest model extent ≤ old that divides n_chips and the arch dims
+    divisors = [m for m in range(min(model_old, n_chips), 0, -1)
+                if n_chips % m == 0 and _model_divides(cfg, m)]
+    model = divisors[0] if divisors else 1
+    if model != model_old:
+        notes.append(f"model axis {model_old}→{model} "
+                     f"(arch dims / chip count)")
+    rest = n_chips // model
+    pod = old_shape.get("pod", 1)
+    if rest % pod != 0:
+        pod = 1
+        notes.append("pod axis collapsed to 1")
+    data = rest // pod
+    accum = 1
+    if global_batch % (pod * data) != 0:
+        accum = int(np.ceil((pod * data) / max(global_batch, 1)))
+        notes.append(f"grad accumulation ×{accum} (batch {global_batch} "
+                     f"∤ data extent {pod * data})")
+    new = {"data": data, "model": model}
+    if pod > 1:
+        new = {"pod": pod, **new}
+    return RescalePlan(dict(old_shape), new, accum, tuple(notes))
+
+
+def _model_divides(cfg, m: int) -> bool:
+    dims = [cfg.d_ff, cfg.n_heads * cfg.head_dim]
+    if cfg.n_experts:
+        dims.append(cfg.n_experts * cfg.d_ff)
+    return all(d % m == 0 for d in dims if d)
+
+
+def rescale_state(state, state_like, cfg, new_mesh, ckpt_manager,
+                  step: Optional[int] = None):
+    """Restore ``state_like``-shaped state from the checkpoint onto
+    ``new_mesh`` with re-derived shardings (the elastic restart path)."""
+    from repro.dist.sharding import make_shardings
+    import jax
+
+    shards = make_shardings(jax.eval_shape(lambda: state_like), cfg, new_mesh)
+    return ckpt_manager.restore(state_like, step=step, shardings=shards)

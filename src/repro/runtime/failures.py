@@ -1,0 +1,71 @@
+"""Failure recovery and straggler mitigation.
+
+``run_with_restarts`` is the launcher-side crash-recovery loop: it runs the
+training function, and on any exception restores the latest committed
+checkpoint and resumes from that step.  Combined with the deterministic
+per-step data pipeline this gives exactly-once step semantics (modulo the
+steps since the last checkpoint).  On a real cluster the same loop wraps
+the per-host process under the cluster manager; here it is exercised by
+fault-injection tests (tests/test_runtime.py) per DESIGN.md §5.
+
+``StepWatchdog`` is the straggler detector: it tracks a robust step-time
+estimate (median + MAD) and flags steps exceeding ``k_mad`` deviations —
+the signal a deployment uses to trigger re-dispatch of a slow host's shard
+or to exclude a failing node at the next elastic restart.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+
+class StepWatchdog:
+    def __init__(self, k_mad: float = 6.0, warmup: int = 5):
+        self.times: List[float] = []
+        self.k_mad = k_mad
+        self.warmup = warmup
+        self.flagged: List[int] = []
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int, *, now: Optional[float] = None) -> bool:
+        """Record step duration; returns True when flagged as straggler."""
+        dt = (now if now is not None else time.perf_counter()) - self._t0
+        return self.observe(step, dt)
+
+    def observe(self, step: int, dt: float) -> bool:
+        hist = self.times[-100:]
+        self.times.append(dt)
+        if len(hist) < self.warmup:
+            return False
+        med = sorted(hist)[len(hist) // 2]
+        mad = sorted(abs(t - med) for t in hist)[len(hist) // 2] + 1e-9
+        if dt > med + self.k_mad * mad and dt > 1.5 * med:
+            self.flagged.append(step)
+            return True
+        return False
+
+
+def run_with_restarts(train_fn: Callable[[int], int], *, ckpt_manager,
+                      max_restarts: int = 3, logger=print) -> int:
+    """Run ``train_fn(start_step) -> final_step`` with crash recovery.
+
+    ``train_fn`` must checkpoint through ``ckpt_manager`` and be resumable
+    from any committed step.  Returns the final step reached.
+    """
+    restarts = 0
+    while True:
+        start = (ckpt_manager.latest_step() or 0)
+        try:
+            return train_fn(start)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # noqa: BLE001 — any step failure triggers recovery
+            restarts += 1
+            logger(f"[failures] step crashed ({type(e).__name__}: {e}); "
+                   f"restart {restarts}/{max_restarts} from step "
+                   f"{ckpt_manager.latest_step() or 0}")
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,19 @@
+"""Test session config.
+
+The distributed sorting library cannot be exercised on a single device, so
+the test session runs with 8 emulated CPU devices (NOT the 512-device
+dry-run setting, which stays confined to repro.launch.dryrun per the
+project brief).  This must happen before jax initializes its backend —
+conftest import precedes all test imports.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np   # noqa: E402
+import pytest        # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,31 @@
+"""Shared helpers: the sort-correctness contract every algorithm must meet."""
+import numpy as np
+
+from repro.core.api import psort
+
+
+def check_sort(x, p, algorithm, *, check_balance=False, expect_overflow=False,
+               **kw):
+    """Assert output == np.sort(input), exact multiset, zero overflow."""
+    out, info = psort(np.asarray(x), p=p, algorithm=algorithm,
+                      return_info=True, **kw)
+    out = np.asarray(out)
+    ref = np.sort(np.asarray(x))
+    if expect_overflow:
+        assert info["overflow"] > 0, \
+            f"{algorithm} expected to overflow on this instance"
+        return info
+    assert info["overflow"] == 0, \
+        f"{algorithm} overflowed by {info['overflow']} on n={len(x)} p={p}"
+    assert out.shape == ref.shape, (out.shape, ref.shape)
+    assert (out == ref).all(), \
+        f"{algorithm} mis-sorted (first diff at " \
+        f"{np.argmax(out != ref) if len(out) else 0})"
+    if len(x):
+        perm = info["perm"]
+        assert len(np.unique(perm)) == len(x), \
+            f"{algorithm} lost/duplicated payload elements"
+    if check_balance and len(x) >= p:
+        assert info["balance"] <= 3.0, \
+            f"{algorithm} output imbalance {info['balance']:.2f}"
+    return info

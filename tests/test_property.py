@@ -1,0 +1,73 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import types as ct
+from helpers import check_sort
+
+ALGOS = ["rquick", "rfis", "rams", "bitonic"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-2**31, 2**31 - 1), min_size=0, max_size=300),
+       st.sampled_from(ALGOS))
+def test_psort_matches_npsort(xs, algorithm):
+    check_sort(np.array(xs, np.int32), 4, algorithm)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.sampled_from([0, 1, -1, 2**31 - 1, -2**31]),
+                min_size=1, max_size=200),
+       st.sampled_from(ALGOS))
+def test_psort_extreme_duplicates(xs, algorithm):
+    check_sort(np.array(xs, np.int32), 4, algorithm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(allow_nan=False, width=32), min_size=0,
+                max_size=200))
+def test_key_transform_order_isomorphism(xs):
+    import jax.numpy as jnp
+    x = np.array(xs, np.float32)
+    u = np.asarray(ct.key_to_uint(jnp.asarray(x)))
+    # order-preserving
+    order_x = np.argsort(x, kind="stable")
+    assert (np.sort(x) == x[np.argsort(u, kind="stable")]).all() or \
+        (np.sort(u) == u[order_x]).all()
+    # invertible
+    back = np.asarray(ct.uint_to_key(jnp.asarray(u), jnp.float32))
+    assert (back == x).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 10**9))
+def test_merge_shards_preserves_multiset(n, seed):
+    import jax.numpy as jnp
+    r = np.random.default_rng(seed)
+    a = np.sort(r.integers(0, 50, size=n)).astype(np.uint32)
+    b = np.sort(r.integers(0, 50, size=n // 2 + 1)).astype(np.uint32)
+    sa = ct.make_shard(jnp.asarray(a), capacity=n + 8)
+    sb = ct.make_shard(jnp.asarray(b), capacity=n + 8)
+    merged, ovf = ct.merge_shards(sa, sb, capacity=2 * n + 16)
+    assert int(ovf) == 0
+    got = np.asarray(merged.keys)[:int(merged.count)]
+    assert (got == np.sort(np.concatenate([a, b]))).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 200), st.integers(0, 10**9))
+def test_median_estimator_quality(n, seed):
+    """Single-PE window: splitter must be the true median (±1 rank)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.median import local_window, splitter_from_window, unlift
+    r = np.random.default_rng(seed)
+    x = np.sort(r.integers(0, 2**31, size=n)).astype(np.uint32)
+    sh = ct.make_shard(jnp.asarray(x))
+    w = local_window(sh, k=16, coin=jnp.int32(0))
+    s, empty = splitter_from_window(w, seed=seed % 1000)
+    assert not bool(empty)
+    key = int(np.asarray(unlift(s, jnp.uint32)))
+    rank = np.searchsorted(x, key)
+    assert abs(rank - n // 2) <= 8 + 1   # within the window half-width

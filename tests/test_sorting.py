@@ -1,0 +1,91 @@
+"""Core contract: every algorithm × every paper input instance × sizes.
+
+This is the reproduction of the paper's robustness matrix (§VII / Fig. 1):
+the robust algorithms must sort *every* instance including Zero, DeterDupl,
+Staggered, Mirrored and AllToOne; the non-robust baselines are expected to
+fail exactly where the paper says they fail.
+"""
+import numpy as np
+import pytest
+
+from repro.data.distributions import INSTANCES, generate_instance
+from helpers import check_sort
+
+ROBUST = ["rquick", "rfis", "rams", "bitonic"]
+ALL_INSTANCES = sorted(INSTANCES)
+
+
+@pytest.mark.parametrize("algorithm", ROBUST)
+@pytest.mark.parametrize("instance", ALL_INSTANCES)
+def test_robust_all_instances(algorithm, instance):
+    p = 8
+    for n in (0, 1, 5, 4 * p, 64 * p):
+        x = generate_instance(instance, p, n).astype(np.int64)
+        check_sort(x.astype(np.int32), p, algorithm,
+                   check_balance=(algorithm in ("rquick", "rams", "rfis")))
+
+
+@pytest.mark.parametrize("algorithm", ["gatherm", "allgatherm"])
+@pytest.mark.parametrize("instance", ["Uniform", "Zero", "AllToOne"])
+def test_gather_variants(algorithm, instance):
+    p = 8
+    for n in (0, 1, p // 2, 4 * p):
+        x = generate_instance(instance, p, n).astype(np.int32)
+        check_sort(x, p, algorithm)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_power_of_two_pe_counts(p):
+    x = np.random.default_rng(1).integers(0, 1000, 256).astype(np.int32)
+    for algorithm in ROBUST:
+        check_sort(x, p, algorithm)
+
+
+def test_float_and_negative_keys():
+    r = np.random.default_rng(2)
+    xf = r.normal(size=500).astype(np.float32)
+    out = np.asarray(__import__("repro.core.api", fromlist=["psort"]).psort(
+        xf, p=8, algorithm="rquick"))
+    assert (out == np.sort(xf)).all()
+    xi = r.integers(-2**31, 2**31, size=500).astype(np.int32)
+    check_sort(xi, 8, "rquick")
+
+
+def test_ssort_duplicate_weakness_matches_paper():
+    """The classical sample sort is NOT robust to heavy duplicates (paper
+    §VII-B: NTB variants deadlock; our static-capacity analogue
+    overflows).  This is an intended negative result."""
+    p = 8
+    x = generate_instance("Zero", p, 64 * p).astype(np.int32)
+    check_sort(x, p, "ssort", expect_overflow=True)
+
+
+def test_ssort_uniform_ok():
+    x = generate_instance("Uniform", 8, 512).astype(np.int32)
+    check_sort(x, 8, "ssort")
+
+
+def test_ntb_quick_fails_on_duplicates():
+    """RQuick without tie-breaking degenerates on DeterDupl (Fig. 2a)."""
+    p = 8
+    x = generate_instance("DeterDupl", p, 64 * p).astype(np.int32)
+    out, info = __import__("repro.core.api", fromlist=["psort"]).psort(
+        x, p=p, algorithm="ntb-quick", return_info=True)
+    # either overflow or gross imbalance must be observed
+    assert info["overflow"] > 0 or info["balance"] > 3.0
+
+
+def test_auto_selection_regimes():
+    from repro.core.selection import select_algorithm
+    p = 262144
+    assert select_algorithm(max(1, p // 243), p) == "gatherm"   # very sparse
+    assert select_algorithm(2 * p, p) in ("rfis", "rquick")
+    assert select_algorithm(2**10 * p, p) == "rquick"           # small
+    assert select_algorithm(2**20 * p, p) == "rams"             # large
+
+
+def test_auto_psort_small():
+    x = np.random.default_rng(3).integers(0, 100, 64).astype(np.int32)
+    out, info = __import__("repro.core.api", fromlist=["psort"]).psort(
+        x, p=8, algorithm="auto", return_info=True)
+    assert (np.asarray(out) == np.sort(x)).all()
