@@ -20,10 +20,7 @@ NPP = 256
 
 
 def lower_algo(algorithm):
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map
+    from repro.runtime.compat import shard_map
     mesh = default_mesh(P_DEV)
     fn = _algorithm_fn(algorithm)
 
@@ -35,8 +32,8 @@ def lower_algo(algorithm):
     keys = jax.ShapeDtypeStruct((P_DEV, NPP), jax.numpy.uint32)
     with mesh:
         c = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("sort"),),
-                              out_specs=(P("sort"), P("sort")),
-                              check_vma=False)).lower(keys).compile()
+                              out_specs=(P("sort"), P("sort")))
+                    ).lower(keys).compile()
     return hlo_cost.analyze(c.as_text())
 
 

@@ -30,6 +30,13 @@ def main():
                   f"{info['balance']:7.2f} {info['overflow']}")
             assert ok and info["overflow"] == 0
 
+    # high emulated PE counts: the sim backend is not capped by devices
+    x = generate_instance("Staggered", 128, 128 * 32).astype(np.int32)
+    out = psort(x, p=128, algorithm="rquick", backend="sim")
+    ok = bool((np.asarray(out) == np.sort(x)).all())
+    print(f"\nsim backend: p=128 rquick sorted={ok}")
+    assert ok
+
     # the paper's headline: algorithm choice depends on n/p
     print("\nAuto-selection regimes at p=262144 (paper Fig. 1 structure):")
     for e in (-8, -2, 0, 4, 10, 16, 22):

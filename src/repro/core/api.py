@@ -10,6 +10,15 @@ Two layers:
     ``shard_map`` and compose with other shard_map code (e.g. MoE dispatch);
   * ``psort`` is the host-level convenience wrapper: takes a global array,
     builds the mesh + shard_map, returns the globally sorted array.
+
+Execution backends (``backend=``):
+  * ``"shard_map"`` — one shard per device over a mesh axis (production; p
+    is capped by the available device count);
+  * ``"sim"`` — single-process simulation: the same per-PE body is vmapped
+    over a leading PE axis with collectives routed through
+    ``repro.core.comm``, lifting the device cap (p = 64–1024 emulated PEs).
+Both backends trace the identical body with identical PRNG folding, so
+their outputs match bit for bit at equal (n, p, algorithm, seed).
 """
 from __future__ import annotations
 
@@ -21,20 +30,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import selection
+from repro.runtime.compat import shard_map
+
+from . import comm, selection
 from .types import SortShard, key_to_uint, make_shard, pad_value, uint_to_key
 
-try:  # jax >= 0.4.35 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+BACKENDS = ("shard_map", "sim")
 
 
 def default_mesh(p: Optional[int] = None, axis: str = "sort") -> Mesh:
     devs = jax.devices()
     p = p or len(devs)
     if p > len(devs):
-        raise ValueError(f"requested p={p} > available devices {len(devs)}")
+        raise ValueError(f"requested p={p} > available devices {len(devs)}"
+                         f" (use backend='sim' for emulated PE counts)")
     return Mesh(np.array(devs[:p]), (axis,))
 
 
@@ -71,18 +80,20 @@ def _wrap_result(fn):
     return wrapped
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
-                                   "out_capacity", "mesh", "algo_kw"))
-def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
-               out_capacity, algo_kw):
+def _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw):
+    """The per-PE SPMD body shared by both backends.
+
+    Takes (keys (per,), count ()) for one PE, returns (keys (out_cap,),
+    idx (out_cap,), count (), overflow ()).
+    """
     algo_kw = dict(algo_kw)
 
-    def body(keys_blk, count_blk):
-        per = keys_blk.shape[1]
+    def body(keys_pe, count_pe):
+        per = keys_pe.shape[0]
         # global index payload proves permutation-ness in tests
-        base = jax.lax.axis_index(axis_name).astype(jnp.uint32) * np.uint32(per)
+        base = comm.axis_index(axis_name).astype(jnp.uint32) * np.uint32(per)
         idx = base + jnp.arange(per, dtype=jnp.uint32)
-        shard = make_shard(keys_blk[0], count=count_blk[0], capacity=capacity,
+        shard = make_shard(keys_pe, count=count_pe, capacity=capacity,
                            vals={"idx": idx})
         fn = _algorithm_fn(algorithm)
         out, overflow = fn(shard, axis_name, p, **algo_kw)
@@ -90,23 +101,53 @@ def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
         ok = jnp.minimum(out.count, out_capacity)
         keys = out.keys[:out_capacity]
         idx = out.vals.get("idx", jnp.zeros((out.capacity,), jnp.uint32))[:out_capacity]
-        return keys[None], idx[None], ok[None], overflow[None]
+        return keys, idx, ok, overflow
 
-    out = shard_map(body, mesh=mesh,
+    return body
+
+
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
+                                   "out_capacity", "mesh", "algo_kw"))
+def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
+               out_capacity, algo_kw):
+    body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
+
+    def blk(keys_blk, count_blk):
+        k, i, c, o = body(keys_blk[0], count_blk[0])
+        return k[None], i[None], c[None], o[None]
+
+    out = shard_map(blk, mesh=mesh,
                     in_specs=(P(axis_name), P(axis_name)),
-                    out_specs=(P(axis_name),) * 4,
-                    check_vma=False)(keys2d, counts)
+                    out_specs=(P(axis_name),) * 4)(keys2d, counts)
     return out
+
+
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
+                                   "out_capacity", "algo_kw"))
+def _psort_sim_jit(keys2d, counts, axis_name, p, algorithm, capacity,
+                   out_capacity, algo_kw):
+    body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
+    return comm.sim_map(body, axis_name, p)(keys2d, counts)
 
 
 def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
           mesh: Optional[Mesh] = None, axis: str = "sort",
           capacity_factor: float = 2.0, return_info: bool = False,
-          **algo_kw):
+          backend: str = "shard_map", **algo_kw):
     """Sort a host array with p emulated PEs.  Returns the sorted array
     (and an info dict with overflow / balance when ``return_info``)."""
-    mesh = mesh or default_mesh(p, axis)
-    p = mesh.shape[axis]
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if backend == "shard_map":
+        mesh = mesh or default_mesh(p, axis)
+        p = mesh.shape[axis]
+    else:
+        if mesh is not None:
+            raise ValueError("backend='sim' runs meshless; drop the mesh arg")
+        if p is None:
+            raise ValueError("backend='sim' needs an explicit p")
+    if p & (p - 1):
+        raise ValueError(f"p={p} must be a power of two (hypercube layout)")
     keys = jnp.asarray(keys)
     n = keys.shape[0]
     orig_dtype = keys.dtype
@@ -123,9 +164,13 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     keys2d = flat.reshape(p, per)
     counts = jnp.minimum(jnp.maximum(n - per * jnp.arange(p), 0), per).astype(jnp.int32)
 
-    keys_out, idx_out, counts_out, overflow = _psort_jit(
-        keys2d, counts, mesh, axis, p, algorithm, capacity, out_capacity,
-        tuple(sorted(algo_kw.items())))
+    kw = tuple(sorted(algo_kw.items()))
+    if backend == "shard_map":
+        keys_out, idx_out, counts_out, overflow = _psort_jit(
+            keys2d, counts, mesh, axis, p, algorithm, capacity, out_capacity, kw)
+    else:
+        keys_out, idx_out, counts_out, overflow = _psort_sim_jit(
+            keys2d, counts, axis, p, algorithm, capacity, out_capacity, kw)
     keys_out = np.asarray(keys_out)
     counts_out = np.asarray(counts_out)
     pe_range = range(1) if algorithm == "allgatherm" else range(p)
@@ -135,6 +180,7 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
         idx_parts = [np.asarray(idx_out)[i, :counts_out[i]] for i in range(p)]
         info = {
             "algorithm": algorithm,
+            "backend": backend,
             "counts": counts_out,
             "overflow": int(np.asarray(overflow).sum()),
             "balance": counts_out.max() / max(1.0, n / p),

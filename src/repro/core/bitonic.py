@@ -16,6 +16,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import comm
 from .hypercube import exchange_shard
 from .types import SortShard, local_sort, merge_shards, pad_value
 
@@ -44,7 +45,7 @@ def _split_half(merged: SortShard, cap: int, keep_low):
 def bitonic(shard: SortShard, axis_name: str, p: int) -> BitonicResult:
     d = p.bit_length() - 1
     cap = shard.capacity
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     shard = local_sort(shard)
     for k in range(d):                     # stage: sorted blocks of 2^(k+1)
         for j in range(k, -1, -1):         # substage distance 2^j

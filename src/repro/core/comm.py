@@ -1,0 +1,254 @@
+"""Collectives runtime: one interface, two execution backends.
+
+Every communication primitive the sorting library uses (``ppermute``,
+``psum``, ``all_gather``, ``all_to_all``, ``axis_index`` and their grouped
+variants) is routed through the module-level functions below, which dispatch
+to the *current* :class:`Collectives` implementation:
+
+  * :class:`LaxCollectives` — the production path: thin forwarding to
+    ``jax.lax``; valid inside ``shard_map`` over real (or emulated host)
+    devices.  This is the default.
+
+  * :class:`SimCollectives` — the **simulation backend**: the same algorithm
+    bodies are evaluated over a leading PE axis in a single process with
+    ``jax.vmap(body, axis_name=...)`` (see :func:`sim_map`).  vmap's
+    batching rules implement the ungrouped collectives natively; the grouped
+    variants (``axis_index_groups``), which vmap does not support, are
+    implemented here from one full ``all_gather`` plus static group-index
+    tables.  This lifts the XLA host-device cap: ``psort`` and the hypercube
+    primitives run at p = 64–1024 emulated PEs in one process, enough to
+    exercise the paper's p-scaling behavior in CI.
+
+Backends are scoped with :func:`use` (a context manager); the scope must be
+active while the algorithm body is *traced*, so backend runners like
+:func:`sim_map` enter it inside their traced wrapper.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Collectives:
+    """Interface of the named-axis collectives the library relies on."""
+
+    name = "abstract"
+
+    def axis_index(self, axis_name):
+        raise NotImplementedError
+
+    def ppermute(self, x, axis_name, perm):
+        raise NotImplementedError
+
+    def psum(self, x, axis_name, axis_index_groups=None):
+        raise NotImplementedError
+
+    def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
+        raise NotImplementedError
+
+    def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
+                   axis_index_groups=None, tiled=False):
+        raise NotImplementedError
+
+
+class LaxCollectives(Collectives):
+    """Forward to ``jax.lax`` — the shard_map / real-device path."""
+
+    name = "shard_map"
+
+    def axis_index(self, axis_name):
+        return jax.lax.axis_index(axis_name)
+
+    def ppermute(self, x, axis_name, perm):
+        return jax.lax.ppermute(x, axis_name, perm)
+
+    def psum(self, x, axis_name, axis_index_groups=None):
+        return jax.lax.psum(x, axis_name, axis_index_groups=axis_index_groups)
+
+    def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
+        return jax.lax.all_gather(x, axis_name,
+                                  axis_index_groups=axis_index_groups,
+                                  tiled=tiled)
+
+    def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
+                   axis_index_groups=None, tiled=False):
+        return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                                  concat_axis=concat_axis,
+                                  axis_index_groups=axis_index_groups,
+                                  tiled=tiled)
+
+
+def _group_tables(axis_index_groups):
+    """Static lookup tables for grouped collectives.
+
+    Returns (members, rank): ``members[i]`` lists the PEs of i's group in
+    group order; ``rank[i]`` is i's position within its group.  Groups must
+    partition the axis and share one size (the jax.lax contract).
+    """
+    groups = [list(g) for g in axis_index_groups]
+    size = len(groups[0])
+    assert all(len(g) == size for g in groups), "groups must be equal-sized"
+    p = sum(len(g) for g in groups)
+    assert sorted(pe for g in groups for pe in g) == list(range(p)), \
+        "groups must partition the axis"
+    members = np.zeros((p, size), np.int32)
+    rank = np.zeros((p,), np.int32)
+    for g in groups:
+        for r, pe in enumerate(g):
+            members[pe] = g
+            rank[pe] = r
+    return members, rank
+
+
+class SimCollectives(Collectives):
+    """Collectives valid under ``jax.vmap(..., axis_name=...)``.
+
+    Ungrouped primitives delegate to ``jax.lax`` (vmap has batching rules
+    for them with semantics identical to shard_map's).  Grouped variants are
+    built from one full all_gather + static index tables, because vmap's
+    collective batching rejects ``axis_index_groups``.
+    """
+
+    name = "sim"
+
+    def axis_index(self, axis_name):
+        return jax.lax.axis_index(axis_name)
+
+    def ppermute(self, x, axis_name, perm):
+        return jax.lax.ppermute(x, axis_name, perm)
+
+    def psum(self, x, axis_name, axis_index_groups=None):
+        if axis_index_groups is None:
+            return jax.lax.psum(x, axis_name)
+        members, _ = _group_tables(axis_index_groups)
+
+        def one(v):
+            g = jax.lax.all_gather(v, axis_name)          # (p, ...)
+            mine = jnp.take(jnp.asarray(members),
+                            jax.lax.axis_index(axis_name), axis=0)
+            # dtype= matches lax.psum's dtype-preserving contract (a bare
+            # sum promotes int32 → int64 under jax_enable_x64)
+            return jnp.sum(jnp.take(g, mine, axis=0), axis=0, dtype=v.dtype)
+
+        return jax.tree.map(one, x)
+
+    def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
+        if axis_index_groups is None:
+            return jax.lax.all_gather(x, axis_name, tiled=tiled)
+        members, _ = _group_tables(axis_index_groups)
+
+        def one(v):
+            g = jax.lax.all_gather(v, axis_name)          # (p, ...)
+            mine = jnp.take(jnp.asarray(members),
+                            jax.lax.axis_index(axis_name), axis=0)
+            out = jnp.take(g, mine, axis=0)               # (gsize, ...)
+            if tiled:
+                out = out.reshape((-1,) + out.shape[2:])
+            return out
+
+        return jax.tree.map(one, x)
+
+    def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
+                   axis_index_groups=None, tiled=False):
+        if axis_index_groups is None:
+            return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                                      concat_axis=concat_axis, tiled=tiled)
+        if split_axis != 0 or concat_axis != 0 or not tiled:
+            raise NotImplementedError(
+                "sim grouped all_to_all supports tiled split/concat axis 0")
+        members, rank = _group_tables(axis_index_groups)
+        gsize = members.shape[1]
+
+        def one(v):
+            assert v.shape[0] % gsize == 0, (v.shape, gsize)
+            blk = v.shape[0] // gsize
+            g = jax.lax.all_gather(v, axis_name)          # (p, gsize*blk, ...)
+            me = jax.lax.axis_index(axis_name)
+            mine = jnp.take(jnp.asarray(members), me, axis=0)
+            r = jnp.take(jnp.asarray(rank), me)
+            sel = jnp.take(g, mine, axis=0)               # (gsize, gsize*blk, ...)
+            out = jax.lax.dynamic_slice_in_dim(sel, r * blk, blk, axis=1)
+            return out.reshape((-1,) + out.shape[2:])     # (gsize*blk, ...)
+
+        return jax.tree.map(one, x)
+
+
+LAX = LaxCollectives()
+SIM = SimCollectives()
+
+# ContextVar, not a module global: tracing may happen from several threads
+# (e.g. two jit cache misses racing), and each trace must see its own
+# backend scope.
+_CURRENT: contextvars.ContextVar[Collectives] = contextvars.ContextVar(
+    "repro_collectives", default=LAX)
+
+
+def current() -> Collectives:
+    return _CURRENT.get()
+
+
+@contextlib.contextmanager
+def use(impl: Collectives):
+    """Scope the active collectives backend (around *tracing*)."""
+    token = _CURRENT.set(impl)
+    try:
+        yield impl
+    finally:
+        _CURRENT.reset(token)
+
+
+# --- module-level dispatchers: the call-site API ---------------------------
+
+
+def axis_index(axis_name):
+    return _CURRENT.get().axis_index(axis_name)
+
+
+def ppermute(x, axis_name, perm):
+    return _CURRENT.get().ppermute(x, axis_name, perm)
+
+
+def psum(x, axis_name, axis_index_groups=None):
+    return _CURRENT.get().psum(x, axis_name,
+                               axis_index_groups=axis_index_groups)
+
+
+def all_gather(x, axis_name, axis_index_groups=None, tiled=False):
+    return _CURRENT.get().all_gather(x, axis_name,
+                                     axis_index_groups=axis_index_groups,
+                                     tiled=tiled)
+
+
+def all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+               axis_index_groups=None, tiled=False):
+    return _CURRENT.get().all_to_all(x, axis_name, split_axis=split_axis,
+                                     concat_axis=concat_axis,
+                                     axis_index_groups=axis_index_groups,
+                                     tiled=tiled)
+
+
+# --- simulation runner -----------------------------------------------------
+
+
+def sim_map(body, axis_name: str, p: Optional[int] = None):
+    """Run a per-PE SPMD ``body`` over a leading PE axis in one process.
+
+    ``body`` is the same function one would pass to ``shard_map`` minus the
+    leading block dimension: inputs/outputs are per-PE values, batched over
+    axis 0 of the arguments.  Collectives inside the body must go through
+    this module; they dispatch to :data:`SIM` while the body is traced.
+    """
+
+    def run(*args):
+        if p is not None:
+            for a in jax.tree.leaves(args):
+                assert a.shape[0] == p, (a.shape, p)
+        with use(SIM):
+            return jax.vmap(body, axis_name=axis_name)(*args)
+
+    return run

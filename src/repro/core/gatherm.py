@@ -16,6 +16,7 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from . import comm
 from .hypercube import allgather_merge, exchange_shard
 from .types import SortShard, local_sort, merge_shards, resize
 
@@ -30,7 +31,7 @@ def gather_merge(shard: SortShard, axis_name: str, p: int,
     """Binomial-tree gather-merge to PE 0 (lowest PE of the subcube)."""
     dims = list(dims) if dims is not None else list(range(p.bit_length() - 1))
     shard = local_sort(shard)
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     overflow = jnp.int32(0)
     for t in dims:
         # active senders: PEs whose bits below t are zero and bit t is one

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import comm
 from .types import SortShard, merge_shards, pad_value, compact, resize
 
 
@@ -34,7 +35,7 @@ def subcube_groups(p: int, dims: int):
 
 def hc_exchange(x, axis_name: str, p: int, j: int):
     """Send ``x`` to partner ``i ^ 2^j``; return the partner's ``x``."""
-    return jax.lax.ppermute(x, axis_name, xor_perm(p, j))
+    return comm.ppermute(x, axis_name, xor_perm(p, j))
 
 
 def exchange_shard(shard: SortShard, axis_name: str, p: int, j: int) -> SortShard:
@@ -64,7 +65,7 @@ def allgather_merge(shard: SortShard, axis_name: str, p: int,
     without communicating origin ids.
     """
     dims = list(dims) if dims is not None else list(range(p.bit_length() - 1))
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     for t in dims:
         partner = exchange_shard(shard, axis_name, p, t)
         i_am_upper = ((me >> t) & 1) == 1
@@ -92,7 +93,7 @@ def butterfly_sum(x, axis_name: str, p: int, dims: Sequence[int]):
 
 def subcube_psum(x, axis_name: str, p: int, dims: int):
     """psum within 2^dims subcubes via axis_index_groups (fused collective)."""
-    return jax.lax.psum(x, axis_name, axis_index_groups=subcube_groups(p, dims))
+    return comm.psum(x, axis_name, axis_index_groups=subcube_groups(p, dims))
 
 
 def subcube_prefix_sum(x, axis_name: str, p: int, dims: Sequence[int]):
@@ -102,7 +103,7 @@ def subcube_prefix_sum(x, axis_name: str, p: int, dims: Sequence[int]):
     running total with the partner; lower half adds nothing to prefix, upper
     half adds the partner's total.
     """
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     prefix = jax.tree.map(jnp.zeros_like, x)
     total = x
     for t in dims:
@@ -131,7 +132,7 @@ def hypercube_shuffle(shard: SortShard, axis_name: str, p: int, seed,
     shuffled shard (unsorted!) and an overflow count.
     """
     dims = list(dims) if dims is not None else list(range(p.bit_length() - 1))
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     overflow = jnp.int32(0)
     cap = shard.capacity
     for t in dims:
@@ -166,7 +167,7 @@ def alltoall_shuffle(shard: SortShard, axis_name: str, p: int, seed,
     if slot_cap is None:
         mean = max(1, cap // p)
         slot_cap = int(mean + 4 * np.sqrt(mean) + 8)
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     key = jax.random.fold_in(jax.random.PRNGKey(seed), me)
     dest = jax.random.randint(key, (cap,), 0, p).astype(jnp.int32)
     dest = jnp.where(shard.valid_mask(), dest, jnp.int32(p))  # pads → nowhere
@@ -203,8 +204,8 @@ def _alltoall_route(shard: SortShard, dest: jax.Array, axis_name: str, p: int,
     vals = {k: scatter(v, np.zeros((), v.dtype)) for k, v in shard.vals.items()}
     counts = jnp.minimum(sent_counts, slot_cap)                   # (p,)
 
-    a2a = lambda v: jax.lax.all_to_all(v, axis_name, split_axis=0, concat_axis=0,
-                                       axis_index_groups=groups, tiled=True)
+    a2a = lambda v: comm.all_to_all(v, axis_name, split_axis=0, concat_axis=0,
+                                    axis_index_groups=groups, tiled=True)
     keys = a2a(keys).reshape(-1)
     vals = {k: a2a(v).reshape((p * slot_cap,) + v.shape[2:])
             for k, v in vals.items()}
@@ -232,7 +233,7 @@ def route_by_target(shard: SortShard, axis_name: str, p: int,
     PE in bit j (high→low).  O(α log p) startups; per-step volume is bounded
     by the concentration argument of §V for RFIS delivery.
     """
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     cap = capacity or shard.capacity
     shard, overflow = resize(shard, cap)
     for j in sorted(dims, reverse=True):

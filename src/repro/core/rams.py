@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import comm
 from .hypercube import (_alltoall_route, alltoall_shuffle, subcube_groups,
                         subcube_prefix_sum)
 from .types import SortShard, local_sort
@@ -59,16 +60,37 @@ def default_levels(p: int, levels: Optional[int] = None) -> Sequence[int]:
     return [base + (1 if i < rem else 0) for i in range(levels)]
 
 
+def _mix32(x):
+    """Bijective 32-bit mix (murmur3 finalizer).
+
+    The tie-break tag only needs to induce *some* total order on duplicates
+    (App. G) — but the raw (pe, pos) word orders one PE's duplicates as a
+    contiguous run, so on duplicate-heavy inputs an entire source shard
+    routes to one destination and overflows its a2a slot (observed at
+    p = 64 on Zero).  Mixing keeps the tag injective while decorrelating
+    the order from (pe, pos), so duplicates scatter uniformly over buckets
+    and the Chernoff slot provisioning applies again.
+    """
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
 def _composite(keys_u32, pe, pos, valid):
+    tag = _mix32((pe.astype(jnp.uint32) << np.uint32(_POS_BITS))
+                 | pos.astype(jnp.uint32))
     c = (keys_u32.astype(jnp.uint64) << np.uint64(_PE_BITS + _POS_BITS)) \
-        | (pe.astype(jnp.uint64) << np.uint64(_POS_BITS)) \
-        | pos.astype(jnp.uint64)
+        | tag.astype(jnp.uint64)
     return jnp.where(valid, c, _HI64)
 
 
 def rams(shard: SortShard, axis_name: str, p: int, *,
          seed: int = 0xA35, levels: Optional[int] = None,
-         oversample: int = 2, tie_break: bool = True,
+         oversample: int = 4, tie_break: bool = True,
          shuffle: bool = True, slot_factor: float = 2.0) -> RAMSResult:
     """Sort over the whole axis.  Requires uint32 keys (u64 keys would need
     a 128-bit sample composite; psort's key transform covers f32/i32/u32)."""
@@ -79,7 +101,7 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
     bits = default_levels(p, levels)
     cap = shard.capacity
     overflow = jnp.int32(0)
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
 
     if shuffle:
         shard, ovf = alltoall_shuffle(
@@ -110,15 +132,23 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
     k = 1 << b
     p_sub = 1 << h
     p_g = p_sub >> b                       # PEs per target group
-    nb = max(k, oversample * k)            # number of buckets (b·k of paper)
+    # b·k buckets (paper §V): per-level group imbalance is bounded by one
+    # bucket ≈ (1 + 1/b)× — with L levels the bounds *compound* to
+    # (1 + 1/b)^L, so b = 2 (1.5²≈2.25×) breaks the 2× capacity provision
+    # at two levels; b = 4 keeps the product at 1.25²≈1.56×.
+    nb = max(k, oversample * k)
     cap = shard.capacity
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     sub_rel = me & (p_sub - 1)             # my index within the subcube
     groups = subcube_groups(p, h)
     sub_dims = list(range(h))
 
     # --- 1. local samples with tie-break composites ------------------------
-    s_per = max(1, -(-(2 * k * max(1, int(math.log2(k + 1)))) // p_sub))
+    # sample count scales with the *bucket* count nb (not just k): splitter
+    # quantiles must resolve bucket-width mass, else the last level
+    # (p_g = 1, where group total == PE load) inherits the full sampling
+    # error and breaks the 2× capacity bound (observed at p = 64).
+    s_per = max(1, -(-(2 * nb * max(2, int(math.log2(p_sub + 1)))) // p_sub))
     key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), me), 1)
     pos = jax.random.randint(key, (s_per,), 0, jnp.maximum(shard.count, 1))
     sample_keys = shard.keys[pos]
@@ -130,8 +160,8 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
                          samp & ~np.uint64((1 << (_PE_BITS + _POS_BITS)) - 1))
 
     # --- 2. gather + sort samples within subcube ---------------------------
-    all_samp = jax.lax.all_gather(samp, axis_name, axis_index_groups=groups,
-                                  tiled=True)
+    all_samp = comm.all_gather(samp, axis_name, axis_index_groups=groups,
+                               tiled=True)
     all_samp = jnp.sort(all_samp)
     n_valid = jnp.sum(all_samp != _HI64)
 

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import comm
 from .hypercube import allgather_merge, butterfly_sum, route_by_target
 from .types import SortShard, compact, local_sort
 
@@ -60,7 +61,7 @@ def grid_shape(p: int):
 
 
 def _with_origin(shard: SortShard, axis_name: str) -> SortShard:
-    me = jax.lax.axis_index(axis_name).astype(jnp.uint32)
+    me = comm.axis_index(axis_name).astype(jnp.uint32)
     cap = shard.capacity
     vals = dict(shard.vals)
     vals["_orig"] = jnp.full((cap,), me, jnp.uint32)
@@ -71,7 +72,7 @@ def _with_origin(shard: SortShard, axis_name: str) -> SortShard:
 def rfis_rank(shard: SortShard, axis_name: str, p: int) -> RFISRanks:
     """Compute global ranks of all elements in my row (steps 1–4)."""
     rb, cb = grid_shape(p)
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     my_row = me >> cb
     my_col = me & ((1 << cb) - 1)
 
@@ -114,7 +115,7 @@ def rfis(shard: SortShard, axis_name: str, p: int, *,
          capacity: Optional[int] = None) -> RFISResult:
     """Full RFIS: rank + balanced delivery (step 5)."""
     rb, cb = grid_shape(p)
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     my_col = me & ((1 << cb) - 1)
     out_cap = capacity or shard.capacity
 

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import comm
 from .hypercube import (butterfly_sum, exchange_shard, hypercube_shuffle)
 from .median import (butterfly_median_window, lift, splitter_from_window)
 from .types import SortShard, compact, local_sort, merge_shards, resize
@@ -78,7 +79,7 @@ def rquick(shard: SortShard, axis_name: str, p: int, *,
         overflow = overflow + ovf
     shard = local_sort(shard)
 
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     for it, j in enumerate(sorted(dims, reverse=True)):
         sub_dims = [t for t in dims if t <= j]
         # --- splitter selection in parallel (§III-B) --------------------

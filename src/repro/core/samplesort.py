@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import comm
 from .hypercube import _alltoall_route, alltoall_shuffle
 from .types import SortShard, local_sort, resize
 
@@ -35,7 +36,7 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
                sample_factor: int = 16, slot_factor: float = 2.0,
                oracle_splitters: Optional[jax.Array] = None) -> SSortResult:
     cap = shard.capacity
-    me = jax.lax.axis_index(axis_name)
+    me = comm.axis_index(axis_name)
     overflow = jnp.int32(0)
     slot_cap = int(math.ceil(slot_factor * max(1.0, cap / p)
                              + 6 * math.sqrt(max(1.0, cap / p)) + 6))
@@ -56,7 +57,7 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
         pos = jax.random.randint(key, (s_per,), 0, jnp.maximum(shard.count, 1))
         samp = shard.keys[pos].astype(jnp.uint64)
         samp = jnp.where((pos < shard.count), samp, _HI64)
-        all_samp = jnp.sort(jax.lax.all_gather(samp, axis_name, tiled=True))
+        all_samp = jnp.sort(comm.all_gather(samp, axis_name, tiled=True))
         n_valid = jnp.sum(all_samp != _HI64)
         q = (jnp.arange(1, p, dtype=jnp.int64) * n_valid) // p
         splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]

@@ -1,0 +1,2 @@
+from .sharding import (batch_axes_of, data_axes_of, make_shardings,  # noqa: F401
+                       shard_act)

@@ -1,0 +1,102 @@
+"""Mesh-axis conventions and sharding rules for the model stack.
+
+Axis roles (see ``repro.launch.mesh``):
+  * ``pod``/``data`` — batch parallelism (gradients reduced across);
+  * ``model``        — tensor parallelism (weights split, GSPMD inserts the
+    collectives);
+  * ``sort``         — the 1-D sorting meshes; never used by the model code.
+
+``make_shardings`` assigns a :class:`NamedSharding` to every parameter /
+optimizer leaf with one shape-driven rule: split the largest
+model-divisible non-leading dimension over ``model`` (the leading dimension
+of block params is the scanned layer stack and stays replicated), falling
+back to replication.  Any NamedSharding is *numerically* equivalent — GSPMD
+treats it as a layout constraint — so the rule optimizes memory without
+affecting results; ``cfg.ddp`` replicates weights entirely (the
+small-model regime, where the batch spans data × model instead).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes_of(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    """Mesh axes that carry batch parallelism, outermost first."""
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def batch_axes_of(mesh: Optional[Mesh], cfg=None,
+                  batch: Optional[int] = None) -> Tuple[str, ...]:
+    """Axes the batch dimension shards over.
+
+    Under ``cfg.ddp`` the model axis joins the batch axes (weights are
+    replicated, so every rank can take a batch slice).  Axes are dropped
+    innermost-first until ``batch`` divides the axis product.
+    """
+    if mesh is None:
+        return ()
+    axes = list(data_axes_of(mesh))
+    if cfg is not None and getattr(cfg, "ddp", False) and "model" in mesh.shape:
+        axes.append("model")
+    if batch is not None:
+        while axes and batch % _size(mesh, axes) != 0:
+            axes.pop()
+    return tuple(axes)
+
+
+def shard_act(x: jax.Array, mesh: Optional[Mesh],
+              seq_axis: Optional[str] = None, d_axis: Optional[str] = None,
+              axes: Optional[Tuple[str, ...]] = None) -> jax.Array:
+    """Constrain an activation ``(B, S, ..., D)`` to the mesh layout.
+
+    ``axes`` shards the batch dim (default: the data axes when the batch
+    divides them); ``seq_axis``/``d_axis`` shard dims 1 / -1.  Callers
+    guarantee divisibility for the axes they pass explicitly.
+    """
+    if mesh is None or x.ndim < 2:
+        return x
+    if axes is None:
+        axes = data_axes_of(mesh)
+        if _size(mesh, axes) == 0 or x.shape[0] % max(1, _size(mesh, axes)):
+            axes = ()
+    spec = [tuple(axes) or None] + [None] * (x.ndim - 1)
+    if seq_axis is not None and x.ndim >= 3:
+        spec[1] = seq_axis
+    if d_axis is not None:
+        spec[-1] = d_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def make_shardings(tree, cfg, mesh: Optional[Mesh]):
+    """NamedSharding pytree for parameters / optimizer state.
+
+    Works on concrete arrays or ``jax.eval_shape`` outputs — anything with
+    ``.shape``.
+    """
+    if mesh is None:
+        return jax.tree.map(lambda _: None, tree)
+    model = mesh.shape.get("model", 1)
+    ddp = getattr(cfg, "ddp", False) if cfg is not None else False
+
+    def rule(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if model > 1 and not ddp and len(shape) >= 2:
+            cands = [i for i in range(1, len(shape))
+                     if shape[i] >= model and shape[i] % model == 0]
+            if cands:
+                spec[max(cands, key=lambda i: shape[i])] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(rule, tree)

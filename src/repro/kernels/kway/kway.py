@@ -33,7 +33,9 @@ def _classify_block(keys, ties, s_keys, s_ties):
     sk = s_keys[None, None, :]                # (1,1,S)
     st = s_ties[None, None, :]
     le = (sk < k) | ((sk == k) & (st <= t))   # splitter ≤ element (lex)
-    return jnp.sum(le.astype(jnp.int32), axis=-1)
+    # dtype= pins the accumulator: under jax_enable_x64 (flipped on by
+    # repro.core) a plain sum promotes to int64 and breaks the i32 ref store
+    return jnp.sum(le, axis=-1, dtype=jnp.int32)
 
 
 def _kway_kernel(keys_ref, ties_ref, sk_ref, st_ref, bucket_ref, hist_ref,
@@ -44,7 +46,7 @@ def _kway_kernel(keys_ref, ties_ref, sk_ref, st_ref, bucket_ref, hist_ref,
     bucket_ref[...] = bucket
     onehot = (bucket[..., None] ==
               jnp.arange(n_buckets, dtype=jnp.int32)[None, None, :])
-    part = jnp.sum(onehot.astype(jnp.int32), axis=(0, 1))        # (NB,)
+    part = jnp.sum(onehot, axis=(0, 1), dtype=jnp.int32)         # (NB,)
 
     @pl.when(i == 0)
     def _init():

@@ -133,13 +133,10 @@ def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
     routed back (vals carry the bf16 feature vectors as 2-D payload).
     """
     from jax.sharding import PartitionSpec as P
+    from repro.core import comm
     from repro.core.hypercube import _alltoall_route
     from repro.core.types import SortShard, make_shard
-
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
+    from repro.runtime.compat import shard_map
 
     E, k = cfg.n_experts, cfg.top_k
     ep = mesh.shape[model_axis]
@@ -147,7 +144,7 @@ def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
     assert e_per >= 1
 
     def body(x_blk, router, up, gate, down):
-        me = jax.lax.axis_index(model_axis)
+        me = comm.axis_index(model_axis)
         B, S_loc, D = x_blk.shape
         T = B * S_loc
         xt = x_blk.reshape(T, D)
@@ -203,7 +200,6 @@ def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
         in_specs=(dp, P(), P(model_axis, None, None),
                   P(model_axis, None, None), P(model_axis, None, None)),
         out_specs=(dp, P(model_axis), P(model_axis)),
-        check_vma=False,
     )(x, p["router"], p["up"], p["gate"], p["down"])
     return y, jnp.mean(aux)
 
@@ -216,10 +212,8 @@ def moe_tp_shardmap(x, p, cfg, mesh, *, data_axes,
     less collective volume (the mixtral hillclimb, EXPERIMENTS.md §Perf).
     """
     from jax.sharding import PartitionSpec as P
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
+    from repro.core import comm
+    from repro.runtime.compat import shard_map
 
     E, k = cfg.n_experts, cfg.top_k
     dp = P(data_axes, None, None)
@@ -228,7 +222,7 @@ def moe_tp_shardmap(x, p, cfg, mesh, *, data_axes,
         y, aux = moe_local(x_blk, {"router": router, "up": up, "gate": gate,
                                    "down": down}, cfg,
                            capacity_factor=capacity_factor)
-        y = jax.lax.psum(y, "model")
+        y = comm.psum(y, "model")
         return y, aux[None]
 
     y, aux = shard_map(
@@ -236,7 +230,6 @@ def moe_tp_shardmap(x, p, cfg, mesh, *, data_axes,
         in_specs=(dp, P(), P(None, None, "model"), P(None, None, "model"),
                   P(None, "model", None)),
         out_specs=(dp, P("model")),
-        check_vma=False,
     )(x, p["router"], p["up"], p["gate"], p["down"])
     return y, jnp.mean(aux)
 

@@ -1,0 +1,44 @@
+"""Version portability shims for the JAX SPMD API.
+
+The repo must run unmodified across JAX releases whose ``shard_map`` moved
+(``jax.experimental.shard_map.shard_map`` → ``jax.shard_map``) and whose
+replication-check kwarg was renamed (``check_rep`` → ``check_vma``).  Every
+call site in the repo goes through :func:`shard_map` below instead of
+duplicating try/except import blocks.
+
+Only the subset of the shard_map API the repo uses is exposed: ``mesh``,
+``in_specs``, ``out_specs`` and the replication check (named ``check`` here,
+translated to whatever the installed JAX calls it).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # newer JAX exposes shard_map at top level
+    _shard_map_impl = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # pragma: no cover - depends on installed version
+    from jax.experimental.shard_map import shard_map as _shard_map_impl  # type: ignore
+
+# The replication-check kwarg was renamed check_rep → check_vma; detect what
+# the installed implementation accepts so both pins work from one call site.
+_params = inspect.signature(_shard_map_impl).parameters
+if "check_vma" in _params:
+    _CHECK_KWARG = "check_vma"
+elif "check_rep" in _params:
+    _CHECK_KWARG = "check_rep"
+else:  # pragma: no cover - future JAX dropped the kwarg entirely
+    _CHECK_KWARG = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Portable ``shard_map``: maps ``check`` onto check_vma/check_rep.
+
+    The repo's collective bodies produce un-replicated outputs by design
+    (per-PE shards), so ``check`` defaults to off — matching the historical
+    ``check_vma=False`` call sites.
+    """
+    kw = {} if _CHECK_KWARG is None else {_CHECK_KWARG: check}
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)

@@ -5,6 +5,14 @@ the test session runs with 8 emulated CPU devices (NOT the 512-device
 dry-run setting, which stays confined to repro.launch.dryrun per the
 project brief).  This must happen before jax initializes its backend —
 conftest import precedes all test imports.
+
+Higher emulated PE counts (p = 64–256) do not need more XLA devices: the
+``backend="sim"`` path of ``psort`` vmaps the per-PE bodies over a leading
+axis in one process (see ``repro.core.comm``).
+
+Markers: ``slow`` tags the long-tail matrix tests; the default lane
+excludes them (``addopts`` in pyproject.toml), so the tier-1 command
+``pytest -x -q`` stays fast.  Run ``pytest -m slow`` for the full matrix.
 """
 import os
 
@@ -12,6 +20,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np   # noqa: E402
 import pytest        # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running matrix/scaling tests (excluded from "
+        "the default fast lane; run with -m slow)")
 
 
 @pytest.fixture(scope="session")

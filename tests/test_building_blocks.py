@@ -10,10 +10,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import types as ct
 from repro.core import hypercube as hc
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.runtime.compat import shard_map
 
 PDEV = 8
 
@@ -27,8 +24,7 @@ def _run(body, *arrays, p=PDEV, out_specs=None):
     nspec = tuple(P("sort") for _ in arrays)
     with mesh:
         return jax.jit(shard_map(body, mesh=mesh, in_specs=nspec,
-                                 out_specs=out_specs or P("sort"),
-                                 check_vma=False))(*arrays)
+                                 out_specs=out_specs or P("sort")))(*arrays)
 
 
 def test_hc_exchange_is_involution():

@@ -1,0 +1,120 @@
+"""Differential test matrix: every algorithm vs ``np.sort`` across the
+paper's input distributions × PE counts × execution backends.
+
+Contract per cell (check_sort): output equals np.sort(input) exactly,
+the ``idx`` payload is a permutation (no element lost or duplicated), and
+overflow == 0.  The non-robust ssort is exercised only on the instances the
+paper says it handles (its duplicate-key failure is asserted separately in
+test_sorting.py).
+
+The fast lane runs a core instance set covering duplicate-heavy (Zero,
+g-Group) and skewed (Staggered) inputs at p ∈ {2, 4, 8}; the remaining
+instances and the p = 64 sim sweep are marked ``slow``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.api import psort
+from repro.data.distributions import INSTANCES, generate_instance
+from helpers import check_sort
+
+ROBUST = ["rquick", "rfis", "rams", "bitonic"]
+GATHER = ["gatherm", "allgatherm"]
+ALL_ALGOS = ROBUST + ["ssort"] + GATHER
+ALL_INSTANCES = sorted(INSTANCES)
+CORE_INSTANCES = ["Uniform", "Zero", "g-Group", "Staggered"]
+# heavy duplicates overflow classical sample sort's static slots (paper
+# §VII-B); exercising ssort there is the negative test in test_sorting.py.
+# Mirrored joins them at small p: the bit-reversed PE's value range
+# 2^31//(mi+1) collapses to one key, i.e. n/p duplicates of one value.
+SSORT_INSTANCES = [i for i in ALL_INSTANCES
+                   if i not in ("Zero", "DeterDupl", "RandDupl", "Mirrored")]
+
+
+def _cells(algos, instances):
+    for algorithm in algos:
+        for instance in ALL_INSTANCES:
+            if instance not in instances:
+                continue
+            marks = [] if instance in CORE_INSTANCES else [pytest.mark.slow]
+            yield pytest.param(algorithm, instance, marks=marks,
+                               id=f"{algorithm}-{instance}")
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("algorithm,instance", _cells(ROBUST, ALL_INSTANCES))
+def test_robust_matrix(algorithm, instance, p):
+    x = generate_instance(instance, p, 37 * p).astype(np.int32)
+    check_sort(x, p, algorithm)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("algorithm,instance", _cells(["ssort"], SSORT_INSTANCES))
+def test_ssort_matrix(algorithm, instance, p):
+    x = generate_instance(instance, p, 37 * p).astype(np.int32)
+    check_sort(x, p, algorithm)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("algorithm,instance", _cells(GATHER, ALL_INSTANCES))
+def test_gather_matrix(algorithm, instance, p):
+    x = generate_instance(instance, p, 9 * p).astype(np.int32)
+    check_sort(x, p, algorithm)
+
+
+# ---------------------------------------------------------------------------
+# Backend equivalence: sim must match shard_map bit for bit at p = 8.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ALL_ALGOS)
+def test_sim_matches_shard_map_bitwise(algorithm):
+    p = 8
+    x = generate_instance("Uniform", p, 53 * p, seed=11).astype(np.int32)
+    out_sm, info_sm = psort(x, p=p, algorithm=algorithm, return_info=True)
+    out_sim, info_sim = psort(x, p=p, algorithm=algorithm, return_info=True,
+                              backend="sim")
+    assert (np.asarray(out_sm) == np.asarray(out_sim)).all()
+    assert (info_sm["perm"] == info_sim["perm"]).all()
+    assert (info_sm["counts"] == info_sim["counts"]).all()
+    assert info_sm["overflow"] == info_sim["overflow"] == 0
+
+
+# ---------------------------------------------------------------------------
+# High emulated PE counts on the sim backend — beyond the 8 XLA host
+# devices.  p = 64 for every algorithm (the acceptance bar); the instance
+# sweep and p = 256 ride in the slow lane.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ALL_ALGOS)
+def test_sim_p64_all_algorithms(algorithm):
+    p = 64
+    x = generate_instance("Uniform", p, 48 * p, seed=5).astype(np.int32)
+    out = psort(x, p=p, algorithm=algorithm, backend="sim")
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("instance", ALL_INSTANCES)
+@pytest.mark.parametrize("algorithm", ROBUST)
+def test_sim_p64_robust_instances(algorithm, instance):
+    p = 64
+    x = generate_instance(instance, p, 24 * p).astype(np.int32)
+    check_sort(x, p, algorithm, backend="sim")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["rquick", "rams"])
+def test_sim_p256_scaling_smoke(algorithm):
+    p = 256
+    x = generate_instance("Uniform", p, 32 * p).astype(np.int32)
+    check_sort(x, p, algorithm, backend="sim")
+
+
+def test_sim_rejects_bad_args():
+    x = np.arange(16, dtype=np.int32)
+    with pytest.raises(ValueError):
+        psort(x, algorithm="rquick", backend="sim")        # p required
+    with pytest.raises(ValueError):
+        psort(x, p=4, algorithm="rquick", backend="nope")  # unknown backend

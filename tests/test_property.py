@@ -1,7 +1,14 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional test dependency (``pip install -e .[test]``);
+the module is skipped wholesale when it is absent.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import types as ct
 from helpers import check_sort

@@ -118,10 +118,7 @@ def test_grad_compression_error_feedback():
     """int8 compressed psum with error feedback: SGD on a quadratic must
     converge to the same optimum as exact gradients."""
     from repro.optim.grad_compress import compressed_psum
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map
+    from repro.runtime.compat import shard_map
 
     p = 4
     devs = jax.devices()[:p]
@@ -141,7 +138,7 @@ def test_grad_compression_error_feedback():
         stepf = jax.jit(shard_map(
             local_step, mesh=mesh,
             in_specs=(P(), P("data"), P("data")),
-            out_specs=(P(), P("data")), check_vma=False))
+            out_specs=(P(), P("data"))))
         for _ in range(200):
             g, err = stepf(w, data, err)
             w = {"w": w["w"] - 0.05 * g}
@@ -154,10 +151,7 @@ def test_grad_compression_reduces_wire_bytes():
     than an f32 psum of the same gradient."""
     from repro.launch import hlo_cost
     from repro.optim.grad_compress import compressed_psum_mean
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map
+    from repro.runtime.compat import shard_map
     p = 4
     mesh = Mesh(np.array(jax.devices()[:p]), ("data",))
     g = jnp.zeros((1 << 16,), jnp.float32)
@@ -172,8 +166,7 @@ def test_grad_compression_reduces_wire_bytes():
     def wire(fn):
         with mesh:
             c = jax.jit(shard_map(fn, mesh=mesh, in_specs=(P(), P()),
-                                  out_specs=(P(), P()),
-                                  check_vma=False)).lower(g, e).compile()
+                                  out_specs=(P(), P()))).lower(g, e).compile()
         a = hlo_cost.analyze(c.as_text())
         return sum(a["collective_bytes"].values())
 
