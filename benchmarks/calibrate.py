@@ -1,0 +1,432 @@
+"""Measurement-driven calibration of the α/β cost model (ROADMAP items 1–2).
+
+Two measurement phases on the **sim backend** (single process, chunked
+vmap over emulated PEs — p = 64…1024):
+
+1. **Primitive microbenchmarks** → the machine profile.  The way machine
+   constants are derived in "Practical Massively Parallel Sorting"
+   (arXiv 1410.6754): each parameter is isolated by a collective that
+   depends on (almost) nothing else —
+
+     * α      — per-launch cost of a chained tiny-payload ``ppermute``;
+     * β      — payload slope of the same ``ppermute`` (s per word/PE);
+     * α_c,
+       α_hop — tiny-payload ``all_gather`` launch cost regressed on the
+               torus pipeline depth p^(1/3) across the swept p;
+     * local_rate — ``jnp.sort`` throughput in model words (m·lg m / t).
+
+   The result is a measured :class:`repro.core.selection.CostModel`
+   written to ``profiles/<machine>.json`` (load with ``CostModel.load``,
+   pass to ``select_algorithm`` / ``psort(algorithm="auto",
+   cost_model=...)``).
+
+2. **Algorithm sweep** → crossover validation + the CI perf artifact.
+   The four regime algorithms (GatherM / RFIS / RQuick / RAMS) run over
+   n/p × p, collecting per cell the counted collective trace
+   (``repro.core.api.trace_collectives`` — the measured Table I) and
+   wall-clock.  The script reports predicted-vs-measured regime winners
+   per (n/p, p) (the Fig. 1 analogue) and dumps every cell into
+   ``BENCH_calibrate.json``.  A whole-program NNLS fit of
+   ``t ≈ α·p2p + α_c·fused + α_hop·hops + β·words + local/rate`` over the
+   sweep cells is stashed in the profile's ``meta`` as a diagnostic — on
+   a CPU sim host it degenerates (wall-clock is dominated by vectorized
+   data movement, so the launch terms are unidentifiable), which is
+   exactly why the profile itself comes from the microbenchmarks.
+
+Typical runs::
+
+    PYTHONPATH=src python benchmarks/calibrate.py --p 64 256 1024
+    PYTHONPATH=src python benchmarks/calibrate.py --p 64 --fast
+    PYTHONPATH=src python benchmarks/calibrate.py --experiments-only
+
+The p = 1024 column compiles ~20 programs of 1024 emulated PEs; expect
+10–20 minutes for the full three-p run on a laptop-class CPU.
+"""
+import argparse
+import json
+import math
+import os
+import platform
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from common import emit, timeit                                    # noqa: E402
+
+import jax                                                         # noqa: E402
+import jax.numpy as jnp                                            # noqa: E402
+
+from repro.core import comm, selection                             # noqa: E402
+from repro.core.api import psort, trace_collectives                # noqa: E402
+from repro.core.selection import CostModel                         # noqa: E402
+from repro.data.distributions import generate_instance             # noqa: E402
+
+ALGOS = ("gatherm", "rfis", "rquick", "rams")
+
+# n/p exponents (log2) per emulated PE count.  The 1024 column is thinned:
+# each cell is a fresh XLA compile of a 1024-PE program.
+EXPS = {
+    64: [-8, -5, -3, -1, 0, 1, 2, 4, 6],
+    256: [-8, -5, -3, -1, 0, 1, 2, 4, 6],
+    1024: [-8, -3, -1, 0, 2, 4],
+}
+EXPS_FAST = [-3, 0, 2]
+
+
+def eligible(algo: str, e: int, p: int) -> bool:
+    """Measurement windows: each algorithm is swept over its regime plus a
+    margin for locating the crossover, not over grid cells where it is
+    pathological (GatherM's concentrated output at dense n, RFIS's
+    O((n/√p)²) tie ranking)."""
+    if algo == "gatherm":
+        return e <= 0
+    if algo == "rfis":
+        return e <= (4 if p >= 1024 else 6)
+    if algo == "rams":
+        return e >= 0
+    return True
+
+
+def cell_features(n: int, p: int, algo: str) -> dict:
+    tr = trace_collectives(n, p, algo)
+    npp = n / p
+    return {
+        "p2p": tr.p2p_launches,
+        "fused": tr.fused_launches,
+        "hops": tr.fused_hops(p),
+        "wire_words": tr.wire_bytes() / selection.BYTES_PER_WORD,
+        "local_words": npp * math.log2(max(2, n)) + npp,
+        "counts": tr.counts(),
+        "wire_bytes": tr.wire_bytes(),
+    }
+
+
+_FEATURES = ("p2p", "fused", "hops", "wire_words", "local_words")
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: primitive microbenchmarks → the machine profile
+# ---------------------------------------------------------------------------
+
+
+def _median_seconds(jitted, *args, iters=5):
+    jax.block_until_ready(jitted(*args))          # compile + warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_ppermute(p: int, w: int, chain: int = 16) -> float:
+    """Seconds per ppermute launch of a w-word/PE payload at axis size p."""
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def body(v):
+        for _ in range(chain):
+            v = comm.ppermute(v, "pe", perm) + 1  # +1 defeats CSE
+        return v
+
+    f = jax.jit(comm.sim_map(body, "pe", p))
+    x = jnp.zeros((p, w), jnp.int32)
+    return _median_seconds(f, x) / chain
+
+
+def bench_all_gather(p: int, w: int, chain: int = 8) -> float:
+    """Seconds per fused-collective launch (tiny all_gather) at size p."""
+
+    def body(v):
+        acc = v
+        for _ in range(chain):
+            g = comm.all_gather(acc, "pe", tiled=True)    # (p*w,)
+            acc = g.reshape(p, w)[0] + 1                  # (w,), chained
+        return acc
+
+    f = jax.jit(comm.sim_map(body, "pe", p))
+    x = jnp.zeros((p, w), jnp.int32)
+    return _median_seconds(f, x) / chain
+
+
+def bench_local_sort_rate(p: int, m: int = 1 << 14) -> float:
+    """Local words/s in model units: per-PE sort of m words costs
+    m·lg(m)/local_rate on the host that co-executes all p PEs."""
+    f = jax.jit(comm.sim_map(lambda v: jnp.sort(v), "pe", p))
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.integers(0, 2**31, size=(p, m), dtype=np.int64)
+                    .astype(np.int32))
+    t = _median_seconds(f, x)
+    return m * math.log2(m) / t
+
+
+def measure_profile(ps, name: str) -> CostModel:
+    """Microbenchmark the five machine constants on the sim backend.
+
+    All payload-bearing measurements run at the largest swept p: the sim
+    host co-executes every emulated PE, so per-PE costs are p-dependent —
+    the profile models the machine actually used for the sweep."""
+    pmax = max(ps)
+    w_lo, w_hi = 64, 4096
+    alpha = bench_ppermute(pmax, 1)
+    t_lo, t_hi = bench_ppermute(pmax, w_lo), bench_ppermute(pmax, w_hi)
+    beta = max((t_hi - t_lo) / (w_hi - w_lo), 1e-3 * selection.DEFAULT_MODEL.beta)
+
+    hops = np.array([float(p) ** (1.0 / 3.0) for p in ps])
+    t_coll = np.array([bench_all_gather(p, 1) for p in ps])
+    prior = selection.DEFAULT_MODEL
+    if len(ps) >= 2:
+        slope, intercept = np.polyfit(hops, t_coll, 1)
+        alpha_hop = max(float(slope), 1e-3 * prior.alpha_hop)
+        alpha_c = max(float(intercept), 1e-3 * prior.alpha_c)
+    else:
+        alpha_hop = prior.alpha_hop
+        alpha_c = max(float(t_coll[0]) - alpha_hop * float(hops[0]),
+                      1e-3 * prior.alpha_c)
+    local_rate = bench_local_sort_rate(pmax)
+    return CostModel(
+        name=name,
+        alpha=float(alpha), alpha_c=float(alpha_c),
+        alpha_hop=float(alpha_hop), beta=float(beta),
+        local_rate=float(local_rate),
+        slot_overhead=prior.slot_overhead,
+        meta={
+            "microbench": {
+                "method": "primitive microbenchmarks (arXiv 1410.6754 style)",
+                "p": list(ps), "p_payload": pmax,
+                "ppermute_s": {"w1": alpha, f"w{w_lo}": t_lo, f"w{w_hi}": t_hi},
+                "all_gather_s": {str(p): float(t) for p, t in zip(ps, t_coll)},
+                "host": platform.node(),
+                "backend": "sim",
+            },
+        })
+
+
+def fit_profile(cells, name: str) -> CostModel:
+    """Non-negative least squares of the 5-parameter machine profile over
+    measured (features, seconds) cells.  Parameters the data cannot
+    identify (zero weight) fall back to a small fraction of the prior so
+    the regime structure stays non-degenerate."""
+    A = np.array([[c[f] for f in _FEATURES] for c in cells], float)
+    t = np.array([c["seconds"] for c in cells], float)
+    try:
+        from scipy.optimize import nnls
+        theta, _ = nnls(A, t)
+    except Exception:                     # scipy-less fallback
+        theta, *_ = np.linalg.lstsq(A, t, rcond=None)
+        theta = np.clip(theta, 0.0, None)
+    pred = A @ theta
+    ss_res = float(np.sum((t - pred) ** 2))
+    ss_tot = float(np.sum((t - t.mean()) ** 2)) or 1.0
+    r2 = 1.0 - ss_res / ss_tot
+
+    prior = selection.DEFAULT_MODEL
+    floors = (prior.alpha, prior.alpha_c, prior.alpha_hop, prior.beta,
+              1.0 / prior.local_rate)
+    alpha, alpha_c, alpha_hop, beta, inv_rate = (
+        max(v, 1e-3 * f) for v, f in zip(theta, floors))
+    return CostModel(
+        name=name,
+        alpha=alpha, alpha_c=alpha_c, alpha_hop=alpha_hop, beta=beta,
+        local_rate=1.0 / inv_rate,
+        slot_overhead=prior.slot_overhead,
+        meta={
+            "fit": {
+                "r2": r2,
+                "theta": [float(v) for v in theta],
+                "features": list(_FEATURES),
+                "n_cells": len(cells),
+                "host": platform.node(),
+                "backend": "sim",
+            },
+        })
+
+
+def _winner_sequence(rows):
+    """[(e, winner)] → [(e, prev, new)] transition list."""
+    out, prev = [], None
+    for e, w in rows:
+        if w != prev and prev is not None:
+            out.append((e, prev, w))
+        prev = w
+    return out
+
+
+def measured_crossovers(cells, p: int):
+    by_e = {}
+    for c in cells:
+        if c["p"] != p:
+            continue
+        by_e.setdefault(c["e"], []).append((c["seconds"], c["algorithm"]))
+    rows = [(e, min(v)[1]) for e, v in sorted(by_e.items())]
+    return rows, _winner_sequence(rows)
+
+
+def predicted_crossovers(p: int, exps, model: CostModel):
+    rows = [(e, selection.select_algorithm(max(1, int(p * 2.0 ** e)), p,
+                                           model=model)) for e in sorted(exps)]
+    return rows, _winner_sequence(rows)
+
+
+def run_sweep(ps, exps_override, iters: int):
+    cells = []
+    for p in ps:
+        exps = exps_override or EXPS.get(p, EXPS[256])
+        seen = set()
+        for e in exps:
+            n = max(1, int(p * 2.0 ** e))
+            for algo in ALGOS:
+                if not eligible(algo, e, p) or (algo, n) in seen:
+                    continue
+                seen.add((algo, n))
+                x = generate_instance("Uniform", p, n, seed=11).astype(np.int32)
+                us = timeit(lambda: np.asarray(
+                    psort(x, p=p, algorithm=algo, backend="sim")),
+                    warmup=1, iters=iters)
+                feat = cell_features(n, p, algo)
+                cell = {"p": p, "e": e, "n": n, "algorithm": algo,
+                        "us": us, "seconds": us * 1e-6, **feat}
+                cells.append(cell)
+                emit(f"calibrate/p{p}/npp2^{e}/{algo}", us,
+                     f"p2p={feat['p2p']} fused={feat['fused']} "
+                     f"wire={feat['wire_bytes']}B")
+    return cells
+
+
+def write_experiments(path: str, model: CostModel):
+    """Regenerate EXPERIMENTS.md: the regime tables ``selection.py``'s
+    docstring points at, under the given machine profile."""
+    lines = [
+        "# EXPERIMENTS",
+        "",
+        "Regime tables of `repro.core.selection.select_algorithm` — which",
+        "algorithm the α/β cost model picks per (n/p, p).  Regenerate after",
+        "recalibration with:",
+        "",
+        "```sh",
+        "PYTHONPATH=src python benchmarks/calibrate.py --experiments-only \\",
+        "    [--profile profiles/<machine>.json]",
+        "```",
+        "",
+        f"Machine profile: **{model.name}** "
+        f"(α={model.alpha:.3g}s, α_c={model.alpha_c:.3g}s, "
+        f"α_hop={model.alpha_hop:.3g}s, β={model.beta:.3g}s/word, "
+        f"local={model.local_rate:.3g}w/s)",
+        "",
+    ]
+    for p in (64, 1024, 262144):
+        lines += [f"## p = {p}", "", "| log2(n/p) | n | algorithm |",
+                  "|---:|---:|---|"]
+        for e, n, algo in selection.regime_table(p, range(-8, 24, 2),
+                                                 model=model):
+            lines.append(f"| {e} | {n} | {algo} |")
+        rows = [(e, a) for e, _, a in
+                selection.regime_table(p, range(-8, 24), model=model)]
+        seq = " → ".join([rows[0][1]] + [w for _, _, w in
+                                         _winner_sequence(rows)])
+        lines += ["", f"Regime sequence: {seq}", ""]
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--p", type=int, nargs="+", default=[64, 256],
+                    help="emulated PE counts to sweep (powers of two)")
+    ap.add_argument("--exps", type=int, nargs="+", default=None,
+                    help="override log2(n/p) grid for every p")
+    ap.add_argument("--fast", action="store_true",
+                    help=f"thin grid {EXPS_FAST} (smoke runs)")
+    ap.add_argument("--iters", type=int, default=2,
+                    help="timed iterations per cell (after 1 warmup)")
+    ap.add_argument("--machine", default=None,
+                    help="profile name (default <os>-<arch>-sim)")
+    ap.add_argument("--profile-dir", default="profiles")
+    ap.add_argument("--profile", default=None,
+                    help="existing profile JSON (for --experiments-only)")
+    ap.add_argument("--bench-json", default="BENCH_calibrate.json")
+    ap.add_argument("--experiments", nargs="?", const="EXPERIMENTS.md",
+                    default=None, help="also regenerate EXPERIMENTS.md")
+    ap.add_argument("--experiments-only", action="store_true",
+                    help="skip the sweep; only write EXPERIMENTS.md")
+    args = ap.parse_args(argv)
+
+    if args.experiments_only:
+        model = CostModel.load(args.profile) if args.profile \
+            else selection.DEFAULT_MODEL
+        path = write_experiments(args.experiments or "EXPERIMENTS.md", model)
+        print(f"# wrote {path} (profile: {model.name})")
+        return 0
+
+    machine = args.machine or \
+        f"{platform.system().lower()}-{platform.machine()}-sim"
+    exps_override = EXPS_FAST if args.fast else args.exps
+
+    print("name,us_per_call,derived")
+    model = measure_profile(args.p, machine)
+    print(f"# microbenched profile: α={model.alpha:.3g}  "
+          f"α_c={model.alpha_c:.3g}  α_hop={model.alpha_hop:.3g}  "
+          f"β={model.beta:.3g}  local_rate={model.local_rate:.3g}")
+
+    cells = run_sweep(args.p, exps_override, args.iters)
+    # whole-program regression over the sweep — diagnostic only (see
+    # module docstring); kept in meta so the two views can be compared
+    sweep_fit = fit_profile(cells, machine)
+    model.meta["sweep_fit"] = {
+        **sweep_fit.meta["fit"],
+        "alpha": sweep_fit.alpha, "alpha_c": sweep_fit.alpha_c,
+        "alpha_hop": sweep_fit.alpha_hop, "beta": sweep_fit.beta,
+        "local_rate": sweep_fit.local_rate,
+    }
+    profile_path = model.save(os.path.join(args.profile_dir,
+                                           f"{machine}.json"))
+    r2 = sweep_fit.meta["fit"]["r2"]
+    print(f"# wrote {profile_path}  (sweep-regression diagnostic R²={r2:.3f})")
+
+    # --- predicted vs measured crossovers (Fig. 1 analogue) ---------------
+    crossings = {}
+    for p in args.p:
+        exps = exps_override or EXPS.get(p, EXPS[256])
+        meas_rows, meas_x = measured_crossovers(cells, p)
+        pred_rows, pred_x = predicted_crossovers(p, exps, model)
+        crossings[str(p)] = {
+            "measured_winners": meas_rows, "measured_crossovers": meas_x,
+            "predicted_winners": pred_rows, "predicted_crossovers": pred_x,
+        }
+        print(f"# p={p} measured : " +
+              " ".join(f"2^{e}:{w}" for e, w in meas_rows))
+        print(f"# p={p} predicted: " +
+              " ".join(f"2^{e}:{w}" for e, w in pred_rows))
+
+    bench = {}
+    for c in cells:
+        bench.setdefault(str(c["p"]), {}).setdefault(
+            c["algorithm"], {})[str(c["e"])] = c["us"]
+    with open(args.bench_json, "w") as f:
+        json.dump({
+            "machine": machine,
+            "host": platform.node(),
+            "p": args.p,
+            "cells": cells,
+            "profile": {"path": profile_path,
+                        "alpha": model.alpha, "alpha_c": model.alpha_c,
+                        "alpha_hop": model.alpha_hop, "beta": model.beta,
+                        "local_rate": model.local_rate},
+            "sweep_fit": model.meta["sweep_fit"],
+            "crossovers": crossings,
+            "bench": bench,
+        }, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.bench_json}")
+
+    if args.experiments:
+        path = write_experiments(args.experiments, model)
+        print(f"# wrote {path} (profile: {model.name})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,20 @@
 """Paper Table I: latency (startup count) and communication volume per PE,
-*measured from the compiled HLO* of each algorithm (collective ops counted
-with the trip-count-aware analyzer) vs the asymptotic prediction.
+measured two independent ways against the asymptotic prediction:
 
-derived = "colls=<count> (pred O(<latency>)), wire=<bytes/PE> B
-           (pred O(<volume>) = <words> words)"
+  * *compiled HLO* of each algorithm (collective ops counted with the
+    trip-count-aware analyzer), and
+  * the *counted collective trace* (``repro.core.api.trace_collectives``
+    — the call-site instrumentation ``benchmarks/calibrate.py`` fits the
+    machine profile from).
+
+derived = "colls=<count> cnt=<counted> (pred O(<latency>)),
+           wire=<bytes/PE> B (pred O(<volume>) = <words> words)"
 """
 import numpy as np
 
 import jax
 from repro.core import types as ct
-from repro.core.api import _algorithm_fn, default_mesh
+from repro.core.api import _algorithm_fn, default_mesh, trace_collectives
 from repro.launch import hlo_cost
 from jax.sharding import PartitionSpec as P
 
@@ -60,8 +65,13 @@ def main():
         colls = sum(a["collective_counts"].values())
         wire = sum(a["collective_bytes"].values())
         pred_words = vol_fn(n, P_DEV)
+        try:
+            tr = trace_collectives(n, P_DEV, algo)
+            counted = f"cnt={tr.launches}/{tr.wire_bytes()}B"
+        except Exception as e:   # noqa: BLE001
+            counted = f"cnt=FAIL:{type(e).__name__}"
         emit(f"table1/{algo}", 0.0,
-             f"colls={colls:.0f} (pred O({lat})) wire={wire:.0f}B/PE "
+             f"colls={colls:.0f} {counted} (pred O({lat})) wire={wire:.0f}B/PE "
              f"(pred O({vol})={pred_words:.0f}w={4 * pred_words:.0f}B)")
 
 

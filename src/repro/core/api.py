@@ -133,9 +133,16 @@ def _psort_sim_jit(keys2d, counts, axis_name, p, algorithm, capacity,
 def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
           mesh: Optional[Mesh] = None, axis: str = "sort",
           capacity_factor: float = 2.0, return_info: bool = False,
-          backend: str = "shard_map", **algo_kw):
+          backend: str = "shard_map",
+          cost_model: Optional[selection.CostModel] = None, **algo_kw):
     """Sort a host array with p emulated PEs.  Returns the sorted array
-    (and an info dict with overflow / balance when ``return_info``)."""
+    (and an info dict with overflow / balance when ``return_info``).
+
+    ``cost_model`` parameterizes ``algorithm="auto"``: a
+    :class:`repro.core.selection.CostModel` machine profile (e.g. loaded
+    from a ``profiles/<machine>.json`` written by
+    ``benchmarks/calibrate.py``); defaults to the prior profile.
+    """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
     if backend == "shard_map":
@@ -156,7 +163,7 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     per = -(-max(n, 1) // p)                       # ceil(n/p)
     capacity = max(4, int(np.ceil(per * capacity_factor)))
     if algorithm == "auto":
-        algorithm = selection.select_algorithm(n, p)
+        algorithm = selection.select_algorithm(n, p, model=cost_model)
     out_capacity = _out_capacity(algorithm, n, p, per, capacity)
 
     pad = pad_value(u.dtype)
@@ -195,3 +202,30 @@ def _out_capacity(algorithm: str, n: int, p: int, per: int, capacity: int) -> in
     if algorithm in ("gatherm", "allgatherm"):
         return max(1, p * per)                     # concentrated output
     return capacity
+
+
+def trace_collectives(n: int, p: int, algorithm: str,
+                      capacity_factor: float = 2.0,
+                      **algo_kw) -> comm.CommTrace:
+    """Count the collectives one ``psort`` call would launch, per PE.
+
+    Abstractly evaluates the sim-backend body (shapes only, no FLOPs, no
+    compile) under a :class:`repro.core.comm.CountingCollectives` decorator
+    and returns the structured :class:`repro.core.comm.CommTrace`: launch
+    counts, payload bytes and group sizes per primitive — the measured
+    counterpart of the paper's Table I, and the feature vector
+    ``benchmarks/calibrate.py`` fits the :class:`CostModel` against.
+    """
+    if p & (p - 1):
+        raise ValueError(f"p={p} must be a power of two (hypercube layout)")
+    per = -(-max(n, 1) // p)
+    capacity = max(4, int(np.ceil(per * capacity_factor)))
+    out_capacity = _out_capacity(algorithm, n, p, per, capacity)
+    body = _sort_body("sort", p, algorithm, capacity, out_capacity,
+                      tuple(sorted(algo_kw.items())))
+    counter = comm.CountingCollectives(comm.SIM)
+    runner = comm.sim_map(body, "sort", p, impl=counter)
+    jax.eval_shape(runner,
+                   jax.ShapeDtypeStruct((p, per), jnp.uint32),
+                   jax.ShapeDtypeStruct((p,), jnp.int32))
+    return counter.trace

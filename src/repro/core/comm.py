@@ -1,4 +1,4 @@
-"""Collectives runtime: one interface, two execution backends.
+"""Collectives runtime: one interface, two execution backends, one decorator.
 
 Every communication primitive the sorting library uses (``ppermute``,
 ``psum``, ``all_gather``, ``all_to_all``, ``axis_index`` and their grouped
@@ -14,10 +14,19 @@ to the *current* :class:`Collectives` implementation:
     ``jax.vmap(body, axis_name=...)`` (see :func:`sim_map`).  vmap's
     batching rules implement the ungrouped collectives natively; the grouped
     variants (``axis_index_groups``), which vmap does not support, are
-    implemented here from one full ``all_gather`` plus static group-index
-    tables.  This lifts the XLA host-device cap: ``psort`` and the hypercube
-    primitives run at p = 64–1024 emulated PEs in one process, enough to
-    exercise the paper's p-scaling behavior in CI.
+    implemented here from static group-index tables.  Small groups use one
+    full ``all_gather`` + table lookup; once the batched gather buffer would
+    exceed ``chunk_bytes`` (the p² blow-up that kept the sim backend under
+    p = 256), the same result is produced *chunked*: a ``lax.scan`` ring of
+    ``ppermute`` steps moves one PE block per iteration, so peak memory is
+    the output size O(p·g) instead of O(p²).  This lifts the sim backend to
+    p = 1024 emulated PEs in one process.
+
+  * :class:`CountingCollectives` — a decorator backend: wraps any
+    ``Collectives``, forwards every call unchanged, and records a structured
+    :class:`CommTrace` (per-primitive launch counts, payload bytes per PE,
+    group sizes).  ``benchmarks/calibrate.py`` fits the machine profile of
+    ``core/selection.py`` from these traces; :func:`counting` scopes one.
 
 Backends are scoped with :func:`use` (a context manager); the scope must be
 active while the algorithm body is *traced*, so backend runners like
@@ -27,7 +36,9 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional, Sequence
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +94,164 @@ class LaxCollectives(Collectives):
                                   tiled=tiled)
 
 
+# ---------------------------------------------------------------------------
+# Instrumentation: CommTrace + CountingCollectives
+# ---------------------------------------------------------------------------
+
+
+def _payload_bytes(x) -> int:
+    """Static per-PE payload size of a pytree (works on tracers)."""
+    total = 0
+    for leaf in jax.tree.leaves(x):
+        shape = jnp.shape(leaf)
+        dtype = np.dtype(jnp.result_type(leaf))
+        total += int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEvent:
+    """One collective launch as seen at the call site (per PE)."""
+    primitive: str                    # ppermute | psum | all_gather | all_to_all
+    bytes: int                        # payload bytes moved per PE (input side)
+    group_size: Optional[int] = None  # participants; None = the full axis
+
+
+class CommTrace:
+    """Structured record of every collective launched while tracing a body.
+
+    The counts are *trace-time* quantities: one event per call site
+    execution, with payload sizes read off the static shapes.  Unrolled
+    loops therefore contribute one event per iteration — exactly the launch
+    count the α-terms of the cost model charge for.
+    """
+
+    def __init__(self):
+        self.events: List[CommEvent] = []
+
+    def add(self, primitive: str, nbytes: int,
+            group_size: Optional[int] = None):
+        self.events.append(CommEvent(primitive, int(nbytes), group_size))
+
+    # -- aggregation ------------------------------------------------------
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e.primitive] = out.get(e.primitive, 0) + 1
+        return out
+
+    def payload_bytes(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e.primitive] = out.get(e.primitive, 0) + e.bytes
+        return out
+
+    @property
+    def launches(self) -> int:
+        return len(self.events)
+
+    @property
+    def p2p_launches(self) -> int:
+        """Point-to-point steps (collective-permutes) — the α term."""
+        return sum(1 for e in self.events if e.primitive == "ppermute")
+
+    @property
+    def fused_launches(self) -> int:
+        """Hardware-routed fused collectives — the α_c term."""
+        return sum(1 for e in self.events if e.primitive != "ppermute")
+
+    def fused_hops(self, p: int) -> float:
+        """Σ over fused launches of the torus pipeline depth (group p)^⅓ —
+        the α_hop term of the v5e-style model in ``core/selection.py``."""
+        return float(sum((e.group_size or p) ** (1.0 / 3.0)
+                         for e in self.events if e.primitive != "ppermute"))
+
+    def wire_bytes(self) -> int:
+        return sum(e.bytes for e in self.events)
+
+    def summary(self, p: Optional[int] = None) -> dict:
+        s = {
+            "launches": self.launches,
+            "p2p_launches": self.p2p_launches,
+            "fused_launches": self.fused_launches,
+            "counts": self.counts(),
+            "bytes": self.payload_bytes(),
+            "wire_bytes": self.wire_bytes(),
+        }
+        if p is not None:
+            s["fused_hops"] = self.fused_hops(p)
+        return s
+
+
+class CountingCollectives(Collectives):
+    """Decorator backend: forward to ``inner``, record a :class:`CommTrace`.
+
+    Wraps *any* backend (sim or shard_map), so the same counted trace is
+    available whichever way the body executes.  Records the collective as
+    issued at the call site — e.g. one grouped all_gather is one fused
+    launch regardless of how :class:`SimCollectives` emulates it.
+    """
+
+    def __init__(self, inner: Collectives, trace: Optional[CommTrace] = None):
+        self.inner = inner
+        self.trace = trace if trace is not None else CommTrace()
+        self.name = f"counting({inner.name})"
+
+    @staticmethod
+    def _gsize(axis_index_groups) -> Optional[int]:
+        if axis_index_groups is None:
+            return None
+        return len(list(list(axis_index_groups)[0]))
+
+    def axis_index(self, axis_name):
+        return self.inner.axis_index(axis_name)       # not a communication
+
+    def ppermute(self, x, axis_name, perm):
+        self.trace.add("ppermute", _payload_bytes(x))
+        return self.inner.ppermute(x, axis_name, perm)
+
+    def psum(self, x, axis_name, axis_index_groups=None):
+        self.trace.add("psum", _payload_bytes(x),
+                       self._gsize(axis_index_groups))
+        return self.inner.psum(x, axis_name,
+                               axis_index_groups=axis_index_groups)
+
+    def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
+        self.trace.add("all_gather", _payload_bytes(x),
+                       self._gsize(axis_index_groups))
+        return self.inner.all_gather(x, axis_name,
+                                     axis_index_groups=axis_index_groups,
+                                     tiled=tiled)
+
+    def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
+                   axis_index_groups=None, tiled=False):
+        self.trace.add("all_to_all", _payload_bytes(x),
+                       self._gsize(axis_index_groups))
+        return self.inner.all_to_all(x, axis_name, split_axis=split_axis,
+                                     concat_axis=concat_axis,
+                                     axis_index_groups=axis_index_groups,
+                                     tiled=tiled)
+
+
+@contextlib.contextmanager
+def counting(inner: Optional[Collectives] = None):
+    """Scope a counting decorator over ``inner`` (default: current backend);
+    yields the :class:`CommTrace` being filled.  Must wrap *tracing* — a
+    jit cache hit records nothing.  A ``counting()`` scope survives entry
+    into :func:`sim_map`: the runner re-wraps its sim backend with the
+    same trace, so ``with comm.counting() as tr: psort(..., backend="sim")``
+    records the simulated run's collectives."""
+    cc = CountingCollectives(inner if inner is not None else current())
+    with use(cc):
+        yield cc.trace
+
+
+# ---------------------------------------------------------------------------
+# Simulation backend
+# ---------------------------------------------------------------------------
+
+
 def _group_tables(axis_index_groups):
     """Static lookup tables for grouped collectives.
 
@@ -105,16 +274,54 @@ def _group_tables(axis_index_groups):
     return members, rank
 
 
+def _is_full_identity_group(axis_index_groups) -> bool:
+    groups = [list(g) for g in axis_index_groups]
+    if len(groups) != 1:
+        return False
+    return groups[0] == list(range(len(groups[0])))
+
+
+def _ring_perm(members: np.ndarray, rank: np.ndarray):
+    """Static (source, dest) pairs: every PE receives from its next group
+    neighbor (ring order within each group).  Applying it t times hands PE
+    of rank r the value of group member (r + t) mod g."""
+    p, g = members.shape
+    return [(int(members[i][(rank[i] + 1) % g]), i) for i in range(p)]
+
+
+# Above this batched-buffer size, grouped sim collectives switch from the
+# one-shot full all_gather (fast, O(p²·payload) peak memory once vmap
+# batches it) to the chunked ring evaluation (O(p·g·payload)).
+SIM_CHUNK_BYTES = int(os.environ.get("REPRO_SIM_CHUNK_BYTES", 1 << 28))
+
+
 class SimCollectives(Collectives):
     """Collectives valid under ``jax.vmap(..., axis_name=...)``.
 
     Ungrouped primitives delegate to ``jax.lax`` (vmap has batching rules
-    for them with semantics identical to shard_map's).  Grouped variants are
-    built from one full all_gather + static index tables, because vmap's
-    collective batching rejects ``axis_index_groups``.
+    for them with semantics identical to shard_map's).  Grouped variants,
+    which vmap's collective batching rejects, are built from static group
+    tables with three evaluation strategies per leaf:
+
+      * degenerate groups (size 1, or one group in axis order) reduce to
+        local ops / the native ungrouped collective;
+      * small leaves: one full ``all_gather`` + table lookup (one-shot);
+      * large leaves (batched gather > ``chunk_bytes``): a ``lax.scan``
+        ring of ``ppermute`` steps — one PE block moves per iteration, so
+        the p² buffer never materializes.  Integer results are bit-identical
+        to the one-shot path; float grouped psum may differ in summation
+        order (ring order instead of group order).
     """
 
     name = "sim"
+
+    def __init__(self, chunk_bytes: Optional[int] = None):
+        self.chunk_bytes = SIM_CHUNK_BYTES if chunk_bytes is None \
+            else int(chunk_bytes)
+
+    def _use_ring(self, v, p: int) -> bool:
+        # the one-shot path batches an all_gather: (p, p, ...) elements
+        return p * p * _payload_bytes(v) > max(0, self.chunk_bytes)
 
     def axis_index(self, axis_name):
         return jax.lax.axis_index(axis_name)
@@ -122,12 +329,39 @@ class SimCollectives(Collectives):
     def ppermute(self, x, axis_name, perm):
         return jax.lax.ppermute(x, axis_name, perm)
 
+    # -- grouped helpers --------------------------------------------------
+
+    @staticmethod
+    def _my_rank(rank, axis_name):
+        return jnp.take(jnp.asarray(rank), jax.lax.axis_index(axis_name))
+
+    @staticmethod
+    def _ring_parts(v, axis_name, perm, gsize):
+        """scan the ring: parts[t] = my group member (rank+t)'s ``v``."""
+        def step(carry, _):
+            return jax.lax.ppermute(carry, axis_name, perm), carry
+        _, parts = jax.lax.scan(step, v, None, length=gsize)
+        return parts                                   # (gsize,) + v.shape
+
     def psum(self, x, axis_name, axis_index_groups=None):
-        if axis_index_groups is None:
+        if axis_index_groups is None or \
+                _is_full_identity_group(axis_index_groups):
             return jax.lax.psum(x, axis_name)
-        members, _ = _group_tables(axis_index_groups)
+        members, rank = _group_tables(axis_index_groups)
+        p, gsize = members.shape
+        if gsize == 1:
+            return x
+        perm = _ring_perm(members, rank)
 
         def one(v):
+            if self._use_ring(v, p):
+                def step(carry, _):
+                    rot, acc = carry
+                    rot = jax.lax.ppermute(rot, axis_name, perm)
+                    return (rot, acc + rot), None
+                (_, acc), _ = jax.lax.scan(step, (v, v), None,
+                                           length=gsize - 1)
+                return acc
             g = jax.lax.all_gather(v, axis_name)          # (p, ...)
             mine = jnp.take(jnp.asarray(members),
                             jax.lax.axis_index(axis_name), axis=0)
@@ -138,15 +372,29 @@ class SimCollectives(Collectives):
         return jax.tree.map(one, x)
 
     def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
-        if axis_index_groups is None:
+        if axis_index_groups is None or \
+                _is_full_identity_group(axis_index_groups):
             return jax.lax.all_gather(x, axis_name, tiled=tiled)
-        members, _ = _group_tables(axis_index_groups)
+        members, rank = _group_tables(axis_index_groups)
+        p, gsize = members.shape
+        if gsize == 1:
+            def solo(v):
+                return v if tiled else v[None]
+            return jax.tree.map(solo, x)
+        perm = _ring_perm(members, rank)
 
         def one(v):
-            g = jax.lax.all_gather(v, axis_name)          # (p, ...)
-            mine = jnp.take(jnp.asarray(members),
-                            jax.lax.axis_index(axis_name), axis=0)
-            out = jnp.take(g, mine, axis=0)               # (gsize, ...)
+            if self._use_ring(v, p):
+                parts = self._ring_parts(v, axis_name, perm, gsize)
+                r = self._my_rank(rank, axis_name)
+                # group order: out[j] = member j's value = parts[(j-r) mod g]
+                idx = (jnp.arange(gsize) - r) % gsize
+                out = jnp.take(parts, idx, axis=0)        # (gsize, ...)
+            else:
+                g = jax.lax.all_gather(v, axis_name)      # (p, ...)
+                mine = jnp.take(jnp.asarray(members),
+                                jax.lax.axis_index(axis_name), axis=0)
+                out = jnp.take(g, mine, axis=0)           # (gsize, ...)
             if tiled:
                 out = out.reshape((-1,) + out.shape[2:])
             return out
@@ -155,20 +403,38 @@ class SimCollectives(Collectives):
 
     def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
                    axis_index_groups=None, tiled=False):
-        if axis_index_groups is None:
+        if axis_index_groups is None or \
+                _is_full_identity_group(axis_index_groups):
             return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
                                       concat_axis=concat_axis, tiled=tiled)
         if split_axis != 0 or concat_axis != 0 or not tiled:
             raise NotImplementedError(
                 "sim grouped all_to_all supports tiled split/concat axis 0")
         members, rank = _group_tables(axis_index_groups)
-        gsize = members.shape[1]
+        p, gsize = members.shape
+        if gsize == 1:
+            return x
+        perm = _ring_perm(members, rank)
 
         def one(v):
             assert v.shape[0] % gsize == 0, (v.shape, gsize)
             blk = v.shape[0] // gsize
-            g = jax.lax.all_gather(v, axis_name)          # (p, gsize*blk, ...)
             me = jax.lax.axis_index(axis_name)
+            if self._use_ring(v, p):
+                r = self._my_rank(rank, axis_name)
+
+                def step(carry, _):
+                    # carry = buffer of group member (rank + t); its block
+                    # destined to me sits at my rank's offset
+                    y = jax.lax.dynamic_slice_in_dim(carry, r * blk, blk,
+                                                     axis=0)
+                    return jax.lax.ppermute(carry, axis_name, perm), y
+
+                _, ys = jax.lax.scan(step, v, None, length=gsize)
+                idx = (jnp.arange(gsize) - r) % gsize     # → group order
+                out = jnp.take(ys, idx, axis=0)           # (gsize, blk, ...)
+                return out.reshape((-1,) + out.shape[2:])
+            g = jax.lax.all_gather(v, axis_name)          # (p, gsize*blk, ...)
             mine = jnp.take(jnp.asarray(members), me, axis=0)
             r = jnp.take(jnp.asarray(rank), me)
             sel = jnp.take(g, mine, axis=0)               # (gsize, gsize*blk, ...)
@@ -235,20 +501,38 @@ def all_to_all(x, axis_name, split_axis=0, concat_axis=0,
 # --- simulation runner -----------------------------------------------------
 
 
-def sim_map(body, axis_name: str, p: Optional[int] = None):
+def sim_map(body, axis_name: str, p: Optional[int] = None,
+            impl: Optional[Collectives] = None):
     """Run a per-PE SPMD ``body`` over a leading PE axis in one process.
 
     ``body`` is the same function one would pass to ``shard_map`` minus the
     leading block dimension: inputs/outputs are per-PE values, batched over
     axis 0 of the arguments.  Collectives inside the body must go through
-    this module; they dispatch to :data:`SIM` while the body is traced.
+    this module; they dispatch to ``impl`` while the body is traced — pass
+    a :class:`CountingCollectives` wrapping :data:`SIM` to record the
+    collective trace of a simulated run, or a
+    ``SimCollectives(chunk_bytes=...)`` to tune the chunking threshold.
+
+    When ``impl`` is omitted the runner derives a sim-capable backend from
+    the *ambient* scope at call time: a surrounding :func:`counting` scope
+    keeps counting (re-wrapped over :data:`SIM` with the same trace), an
+    ambient ``SimCollectives`` is kept as-is, and anything else (the
+    shard_map default) becomes :data:`SIM`.
     """
+
+    def _resolve(cur: Collectives) -> Collectives:
+        if isinstance(cur, SimCollectives):
+            return cur
+        if isinstance(cur, CountingCollectives):
+            return CountingCollectives(_resolve(cur.inner), cur.trace)
+        return SIM
 
     def run(*args):
         if p is not None:
             for a in jax.tree.leaves(args):
                 assert a.shape[0] == p, (a.shape, p)
-        with use(SIM):
+        backend = impl if impl is not None else _resolve(current())
+        with use(backend):
             return jax.vmap(body, axis_name=axis_name)(*args)
 
     return run

@@ -38,7 +38,7 @@ import numpy as np
 from . import comm
 from .hypercube import (_alltoall_route, alltoall_shuffle, subcube_groups,
                         subcube_prefix_sum)
-from .types import SortShard, local_sort
+from .types import SortShard, local_sort, resize
 
 _PE_BITS = 12
 _POS_BITS = 20
@@ -109,6 +109,14 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
             slot_cap=_slot_cap(cap, p, slot_factor))
         overflow = overflow + ovf
     shard = local_sort(shard)
+    # drop the shuffle's p·slot_cap slot buffer down to 2× the working
+    # capacity — at p = 1024 the inflated buffer (≈112·cap) would otherwise
+    # flow through every level's classifier and exchange.  The 2× keeps the
+    # provisioning slack the levels' slot caps are scaled from (shrinking
+    # all the way to cap tightens _slot_cap enough to overflow on dense
+    # uniform inputs).
+    shard, ovf = resize(shard, min(shard.capacity, 2 * cap))
+    overflow = overflow + ovf
 
     h = d                                   # dims of the current subcube
     for lvl, b in enumerate(bits):
@@ -210,6 +218,5 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
                                groups=groups)
     out = local_sort(out)
     # restore working capacity
-    from .types import resize
     out, ovf2 = resize(out, cap)
     return out, ovf + ovf2

@@ -45,7 +45,13 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
         shard, ovf = alltoall_shuffle(shard, axis_name, p, seed,
                                       slot_cap=slot_cap)
         overflow = overflow + ovf
-    shard = local_sort(shard)
+        shard = local_sort(shard)
+        # shrink the p·slot_cap shuffle buffer to 2× the working capacity
+        # (full shrink would tighten the exchange slots; see rams.py)
+        shard, ovf = resize(shard, min(shard.capacity, 2 * cap))
+        overflow = overflow + ovf
+    else:
+        shard = local_sort(shard)
 
     if oracle_splitters is not None:
         splitters = jnp.asarray(oracle_splitters)

@@ -1,5 +1,5 @@
 """Algorithm auto-selection from the α/β cost model (paper §IV, Table I),
-re-calibrated for TPU v5e topology.
+parameterized by a measurable machine profile.
 
 The paper's regime boundaries were driven by BlueGene/Q MPI startup costs.
 Two things change on a TPU torus (DESIGN.md §2):
@@ -14,19 +14,85 @@ Two things change on a TPU torus (DESIGN.md §2):
 The four-regime structure of the paper survives with shifted boundaries:
 GatherM (very sparse) → RFIS (sparse) → RQuick (small) → RAMS (large).
 Costs are per-sort seconds for 32-bit words.
+
+The machine constants live in :class:`CostModel` — a profile of (α, α_c,
+α_hop, β, local rate) with a JSON round-trip.  :data:`DEFAULT_MODEL` holds
+the v5e priors that used to be module constants; ``benchmarks/calibrate.py``
+*measures* a profile from counted collective traces + wall-clock on the sim
+backend and writes ``profiles/<machine>.json``, which ``select_algorithm``
+and ``psort(algorithm="auto", cost_model=...)`` accept in place of the
+priors.  Regime tables for representative p are kept in ``EXPERIMENTS.md``
+(regenerate with
+``PYTHONPATH=src python benchmarks/calibrate.py --experiments-only``).
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
+import os
+from typing import Dict, Optional
 
-ALPHA = 2.0e-6          # per collective-permute step (launch + hop)
-ALPHA_C = 5.0e-6        # fused-collective launch
-ALPHA_HOP = 1.5e-6      # per torus hop (pipeline fill of fused collectives)
 BYTES_PER_WORD = 4
-ICI_BW = 50e9           # bytes/s per link
-BETA = BYTES_PER_WORD / ICI_BW
-LOCAL_RATE = 2e9        # words/s local sort/merge/partition throughput
-SLOT_OVERHEAD = 2.2     # static slot provisioning of the a2a exchanges
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Machine profile of the α/β cost model.
+
+    alpha      — seconds per point-to-point step (collective-permute
+                 launch + link latency);
+    alpha_c    — seconds per fused-collective launch;
+    alpha_hop  — seconds per torus hop (pipeline fill of fused collectives,
+                 charged × p^(1/3));
+    beta       — seconds per 32-bit word on the wire;
+    local_rate — words/s of local sort/merge/partition throughput;
+    slot_overhead — static slot provisioning factor of the a2a exchanges;
+    meta       — free-form fit diagnostics (R², sweep grid, host, …).
+    """
+
+    name: str = "tpu-v5e-prior"
+    alpha: float = 2.0e-6
+    alpha_c: float = 5.0e-6
+    alpha_hop: float = 1.5e-6
+    beta: float = BYTES_PER_WORD / 50e9      # 50 GB/s per ICI link
+    local_rate: float = 2e9
+    slot_overhead: float = 2.2
+    meta: Dict = dataclasses.field(default_factory=dict, compare=False)
+
+    # -- derived ----------------------------------------------------------
+
+    def coll(self, p: float) -> float:
+        """Cost of one fused collective at axis size p."""
+        return self.alpha_c + self.alpha_hop * _hops(p)
+
+    # -- JSON round-trip --------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "CostModel":
+        raw = json.loads(text)
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(raw) - fields
+        if unknown:
+            raise ValueError(f"unknown CostModel fields: {sorted(unknown)}")
+        return cls(**raw)
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CostModel":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+DEFAULT_MODEL = CostModel()
 
 
 def _d(p):
@@ -37,65 +103,71 @@ def _hops(p):
     return p ** (1.0 / 3.0)         # 3-D torus diameter-ish
 
 
-def _coll(p):
-    return ALPHA_C + ALPHA_HOP * _hops(p)
-
-
 def _lg(n):
     return math.log2(max(2, n))
 
 
-def cost_gatherm(n, p):
+def cost_gatherm(n, p, model: CostModel = DEFAULT_MODEL):
     # binomial tree: d steps; root ingests all n words single-ported
-    return ALPHA * _d(p) + BETA * n + n / LOCAL_RATE
+    m = model
+    return m.alpha * _d(p) + m.beta * n + n / m.local_rate
 
 
-def cost_allgatherm(n, p):
+def cost_allgatherm(n, p, model: CostModel = DEFAULT_MODEL):
     # doubling: volume doubles per step → ~2n per PE; all PEs merge n words
-    return ALPHA * _d(p) + BETA * 2 * n + n / LOCAL_RATE
+    m = model
+    return m.alpha * _d(p) + m.beta * 2 * n + n / m.local_rate
 
 
-def cost_rfis(n, p):
+def cost_rfis(n, p, model: CostModel = DEFAULT_MODEL):
+    m = model
     d, sq = _d(p), math.sqrt(p)
     row = n / sq
-    return (ALPHA * 2 * d                       # row+col gathers, routing
-            + BETA * 3 * row                    # 2 gathers + delivery
-            + (2 * row * _lg(row) + row) / LOCAL_RATE)  # merges + ranking
+    return (m.alpha * 2 * d                     # row+col gathers, routing
+            + m.beta * 3 * row                  # 2 gathers + delivery
+            + (2 * row * _lg(row) + row) / m.local_rate)  # merges + ranking
 
 
-def cost_rquick(n, p):
+def cost_rquick(n, p, model: CostModel = DEFAULT_MODEL):
+    m = model
     d = _d(p)
     npp = n / p
-    return (ALPHA * (d * (d + 1) / 2)           # per-dim median butterflies
-            + ALPHA * 2 * d                     # shuffle + exchanges
-            + BETA * npp * (2 * d)              # shuffle + per-dim halves
-            + (npp * _lg(n) + npp * d) / LOCAL_RATE)
+    return (m.alpha * (d * (d + 1) / 2)         # per-dim median butterflies
+            + m.alpha * 2 * d                   # shuffle + exchanges
+            + m.beta * npp * (2 * d)            # shuffle + per-dim halves
+            + (npp * _lg(n) + npp * d) / m.local_rate)
 
 
-def cost_rams(n, p, levels=None):
+def cost_rams(n, p, levels=None, model: CostModel = DEFAULT_MODEL):
+    m = model
     npp = n / p
     d = _d(p)
     l = levels or max(1, min(3, round(d / 6)))
     k = p ** (1.0 / l)
-    return ((3 * l + 1) * _coll(p)              # samples, hist, a2a / level
-            + BETA * npp * (SLOT_OVERHEAD * l + 1)   # l exchanges + shuffle
-            + (npp * _lg(n) + npp * l * _lg(k)) / LOCAL_RATE)
+    return ((3 * l + 1) * m.coll(p)             # samples, hist, a2a / level
+            + m.beta * npp * (m.slot_overhead * l + 1)  # l exchanges + shuffle
+            + (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate)
 
 
-def cost_bitonic(n, p):
+def cost_bitonic(n, p, model: CostModel = DEFAULT_MODEL):
+    m = model
     d = _d(p)
     npp = n / p
     steps = d * (d + 1) / 2
-    return ALPHA * steps + BETA * npp * steps + \
-        (npp * _lg(n) + npp * steps) / LOCAL_RATE
+    return m.alpha * steps + m.beta * npp * steps + \
+        (npp * _lg(n) + npp * steps) / m.local_rate
 
 
-def cost_ssort(n, p):
+def cost_ssort(n, p, model: CostModel = DEFAULT_MODEL):
+    m = model
     npp = n / p
-    # p-way splitters: every PE handles p sample words + p-slot exchange
-    return (_coll(p) * 3 + BETA * (npp * SLOT_OVERHEAD + 16 * _lg(p) * p / p)
-            + ALPHA_HOP * _hops(p)
-            + (npp * _lg(n) + p) / LOCAL_RATE)
+    # p-way splitter selection: 16·lg p samples per PE are all-gathered, so
+    # every PE receives a Θ(p log p)-word sample volume — the term that
+    # makes single-level sample sort need n = Ω(p²/log p) to be efficient
+    # (paper §VII).  Each PE also scans the p-sized splitter set locally.
+    return (m.coll(p) * 3 + m.beta * (npp * m.slot_overhead + 16 * _lg(p) * p)
+            + m.alpha_hop * _hops(p)
+            + (npp * _lg(n) + p) / m.local_rate)
 
 
 COSTS = {
@@ -106,25 +178,30 @@ COSTS = {
 }
 
 
-def select_algorithm(n: int, p: int) -> str:
+def select_algorithm(n: int, p: int,
+                     model: Optional[CostModel] = None) -> str:
     """The paper's four-regime selection: argmin of the model costs.
 
     GatherM's output lives on one PE (no balance guarantee) → only
     eligible for very sparse inputs (§VII-A(1)).  RAMS needs dense input
-    for its samples/slots to amortize.
+    for its samples/slots to amortize.  ``model`` defaults to the prior
+    profile; pass ``CostModel.load("profiles/<machine>.json")`` to select
+    with measured constants.
     """
+    m = model if model is not None else DEFAULT_MODEL
     cands = dict(COSTS)
     if n > max(8, p // 8):
         cands.pop("gatherm")
     if n <= 4 * p:
         cands.pop("rams", None)
-    return min(cands, key=lambda a: cands[a](max(1, n), p))
+    return min(cands, key=lambda a: cands[a](max(1, n), p, model=m))
 
 
-def regime_table(p: int, exponents=range(-8, 24)):
+def regime_table(p: int, exponents=range(-8, 24),
+                 model: Optional[CostModel] = None):
     """n/p sweep → selected algorithm; used by tests and EXPERIMENTS.md."""
     rows = []
     for e in exponents:
         n = max(1, int(p * (2.0 ** e)))
-        rows.append((e, n, select_algorithm(n, p)))
+        rows.append((e, n, select_algorithm(n, p, model=model)))
     return rows

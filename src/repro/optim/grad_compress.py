@@ -9,6 +9,11 @@ convergence is preserved (unit-tested on a quadratic in tests/).
 
 Used by the DDP training path (replicated params, ≤ few-B models); the
 FSDP/GSPMD path keeps XLA's fused reduce-scatter.
+
+Collectives go through ``repro.core.comm``, so the same body runs inside
+``shard_map`` (production) and under ``comm.sim_map`` (single-process sim
+backend at high emulated PE counts) — and is countable with
+``comm.counting()``.
 """
 from __future__ import annotations
 
@@ -16,6 +21,8 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import comm
 
 
 def init_error_feedback(grads) -> Any:
@@ -44,14 +51,14 @@ def compressed_psum_mean(g: jax.Array, err: jax.Array, axis_name: str,
     q, scale = _quant(chunks)
     err_new = (flat - (q.astype(jnp.float32) * scale).reshape(-1))[:n]
     # reduce-scatter: all-to-all the int8 chunks (+ per-src scales), sum local
-    qs = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
-                            tiled=True).reshape(p, -1)
-    scales = jax.lax.all_gather(scale, axis_name)              # (p,)
+    qs = comm.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                         tiled=True).reshape(p, -1)
+    scales = comm.all_gather(scale, axis_name)                 # (p,)
     mine = jnp.sum(qs.astype(jnp.float32) * scales[:, None], axis=0) / p
     # all-gather the reduced shard, again int8 on the wire
     q2, scale2 = _quant(mine)
-    allq = jax.lax.all_gather(q2, axis_name, tiled=True)       # (n+pad,) int8
-    alls = jax.lax.all_gather(scale2, axis_name)               # (p,)
+    allq = comm.all_gather(q2, axis_name, tiled=True)          # (n+pad,) int8
+    alls = comm.all_gather(scale2, axis_name)                  # (p,)
     shard_len = mine.shape[0]
     out = (allq.astype(jnp.float32).reshape(p, shard_len)
            * alls[:, None]).reshape(-1)[:n]

@@ -6,9 +6,10 @@ dry-run setting, which stays confined to repro.launch.dryrun per the
 project brief).  This must happen before jax initializes its backend —
 conftest import precedes all test imports.
 
-Higher emulated PE counts (p = 64–256) do not need more XLA devices: the
+Higher emulated PE counts (p = 64–1024) do not need more XLA devices: the
 ``backend="sim"`` path of ``psort`` vmaps the per-PE bodies over a leading
-axis in one process (see ``repro.core.comm``).
+axis in one process, with grouped collectives chunked into ring steps once
+their gather buffers would blow past memory (see ``repro.core.comm``).
 
 Markers: ``slow`` tags the long-tail matrix tests; the default lane
 excludes them (``addopts`` in pyproject.toml), so the tier-1 command

@@ -112,6 +112,36 @@ def test_sim_p256_scaling_smoke(algorithm):
     check_sort(x, p, algorithm, backend="sim")
 
 
+# ---------------------------------------------------------------------------
+# p = 1024 on the *chunked* sim backend: grouped collectives take the ring
+# path (their one-shot gather would batch p² buffers — ~200 GB for RAMS),
+# and _alltoall_route's slot assignment is sort-based.  This is the
+# acceptance bar of the measurement-driven-cost-model PR.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("instance", ["Uniform", "Zero", "Staggered"])
+@pytest.mark.parametrize("algorithm", ["rquick", "rams"])
+def test_sim_p1024_chunked_matrix(algorithm, instance):
+    p = 1024
+    x = generate_instance(instance, p, 24 * p).astype(np.int32)
+    check_sort(x, p, algorithm, backend="sim")
+
+
+@pytest.mark.slow
+def test_sim_p1024_auto_uses_measured_structure():
+    """algorithm='auto' at p = 1024 still sorts correctly whichever regime
+    the (default or custom) profile selects."""
+    from repro.core.selection import CostModel
+    p = 1024
+    x = generate_instance("Uniform", p, 8 * p).astype(np.int32)
+    out, info = psort(x, p=p, algorithm="auto", backend="sim",
+                      return_info=True, cost_model=CostModel(name="t"))
+    assert (np.asarray(out) == np.sort(x)).all()
+    assert info["algorithm"] in ("gatherm", "rfis", "rquick", "rams")
+
+
 def test_sim_rejects_bad_args():
     x = np.arange(16, dtype=np.int32)
     with pytest.raises(ValueError):

@@ -1,0 +1,187 @@
+"""Cost-model subsystem: CostModel round-trip, cost-function sanity
+(monotonicity, the fixed p-way sample-volume term of SSort), regime
+structure under parameterized profiles, and the calibrate.py fitter."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import selection
+from repro.core.selection import CostModel
+
+ALL_COSTS = {
+    "gatherm": selection.cost_gatherm,
+    "allgatherm": selection.cost_allgatherm,
+    "rfis": selection.cost_rfis,
+    "rquick": selection.cost_rquick,
+    "rams": selection.cost_rams,
+    "bitonic": selection.cost_bitonic,
+    "ssort": selection.cost_ssort,
+}
+
+
+# ---------------------------------------------------------------------------
+# CostModel dataclass + JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_json_roundtrip(tmp_path):
+    m = CostModel(name="unit", alpha=3e-6, alpha_c=7e-6, alpha_hop=2e-6,
+                  beta=9e-11, local_rate=1.5e9, slot_overhead=2.0,
+                  meta={"fit": {"r2": 0.97}})
+    path = m.save(str(tmp_path / "sub" / "unit.json"))
+    loaded = CostModel.load(path)
+    assert loaded == m
+    assert loaded.meta["fit"]["r2"] == 0.97
+
+
+def test_cost_model_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown CostModel fields"):
+        CostModel.from_json('{"name": "x", "gamma": 1.0}')
+
+
+def test_default_profile_matches_priors():
+    m = selection.DEFAULT_MODEL
+    assert m.alpha == 2.0e-6 and m.alpha_c == 5.0e-6
+    assert m.beta == pytest.approx(4 / 50e9)
+    # cost functions default to the prior profile
+    assert selection.cost_rquick(2**20, 256) == \
+        selection.cost_rquick(2**20, 256, model=m)
+
+
+# ---------------------------------------------------------------------------
+# Cost-function sanity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ALL_COSTS))
+@pytest.mark.parametrize("p", [64, 4096, 2**18])
+def test_costs_positive_and_monotone_in_n(name, p):
+    fn = ALL_COSTS[name]
+    grid = [max(1, p // 64), p, 8 * p, 64 * p, 2**10 * p, 2**16 * p]
+    costs = [fn(n, p) for n in grid]
+    assert all(c > 0 for c in costs)
+    assert all(b >= a for a, b in zip(costs, costs[1:])), \
+        f"{name} not monotone in n at p={p}: {costs}"
+
+
+def test_ssort_pays_p_way_sample_volume():
+    """Regression for the degenerate `16·lg(p)·p/p` term: the all-gathered
+    sample volume is Θ(p log p) words *per PE*, so at fixed n/p the SSort
+    wire term must grow superlinearly with p — the paper's
+    n = Ω(p²/log p) efficiency bound."""
+    npp = 64
+    costs = [selection.cost_ssort(npp * p, p) for p in (64, 1024, 2**14, 2**18)]
+    assert all(b > a for a, b in zip(costs, costs[1:]))
+    # at massive p the sample volume alone dwarfs RAMS entirely
+    p = 2**18
+    assert selection.cost_ssort(npp * p, p) > 5 * selection.cost_rams(npp * p, p)
+    # the wire term dominates scaling: doubling p at fixed n/p must cost
+    # more than the pre-fix (constant 16·lg p) version could explain
+    m = selection.DEFAULT_MODEL
+    delta = selection.cost_ssort(npp * 2**15, 2**15) \
+        - selection.cost_ssort(npp * 2**14, 2**14)
+    assert delta > m.beta * 16 * 14 * 2**14   # ≥ β·(new samples volume)/2
+
+
+# ---------------------------------------------------------------------------
+# Regime structure (paper §IV / Table I)
+# ---------------------------------------------------------------------------
+
+
+def _winners(rows):
+    seq = []
+    for _, _, algo in rows:
+        if not seq or seq[-1] != algo:
+            seq.append(algo)
+    return seq
+
+
+def test_regime_table_four_regimes_default_profile():
+    rows = selection.regime_table(2**18, range(-8, 24))
+    assert _winners(rows) == ["gatherm", "rfis", "rquick", "rams"]
+
+
+def test_regime_table_honors_custom_profile():
+    # make point-to-point steps catastrophically expensive: the fused-
+    # collective algorithm (RAMS) must take over the mid regime too
+    m = CostModel(name="slow-p2p", alpha=1.0, alpha_c=5e-6, alpha_hop=1.5e-6,
+                  beta=8e-11, local_rate=2e9)
+    rows = selection.regime_table(2**18, range(4, 24), model=m)
+    assert all(a == "rams" for _, _, a in rows)
+
+    # free wire, free launches except fused: hypercube algorithms win
+    m2 = CostModel(name="fused-costly", alpha=1e-9, alpha_c=10.0,
+                   alpha_hop=1.0, beta=8e-11, local_rate=2e9)
+    rows2 = selection.regime_table(2**18, range(4, 24), model=m2)
+    assert "rams" not in {a for _, _, a in rows2}
+
+
+def test_select_algorithm_accepts_model_kwarg():
+    p = 2**18
+    assert selection.select_algorithm(2**20 * p, p,
+                                      model=selection.DEFAULT_MODEL) == "rams"
+
+
+# ---------------------------------------------------------------------------
+# The calibrate.py profile fitter (pure function, synthetic data)
+# ---------------------------------------------------------------------------
+
+
+def _import_calibrate():
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    import calibrate
+    return calibrate
+
+
+def test_fit_profile_recovers_known_machine():
+    cal = _import_calibrate()
+    rng = np.random.default_rng(5)
+    theta = np.array([2.5e-6, 6e-6, 1.2e-6, 9e-11, 4e-10])
+    cells = []
+    for _ in range(40):
+        f = {
+            "p2p": int(rng.integers(1, 200)),
+            "fused": int(rng.integers(1, 30)),
+            "hops": float(rng.uniform(1, 100)),
+            "wire_words": float(rng.uniform(1e3, 1e7)),
+            "local_words": float(rng.uniform(1e3, 1e7)),
+        }
+        feats = np.array([f[k] for k in cal._FEATURES])
+        cells.append({**f, "seconds": float(feats @ theta)})
+    model = cal.fit_profile(cells, "synthetic")
+    got = np.array([model.alpha, model.alpha_c, model.alpha_hop, model.beta,
+                    1.0 / model.local_rate])
+    np.testing.assert_allclose(got, theta, rtol=1e-4)
+    assert model.meta["fit"]["r2"] > 0.999
+    assert model.name == "synthetic"
+    # fitted profiles feed straight back into selection
+    assert selection.select_algorithm(2**20 * 2**18, 2**18,
+                                      model=model) == "rams"
+
+
+def test_measure_profile_microbench_smoke():
+    """The microbenchmark path produces a positive, JSON-round-trippable
+    profile (tiny p: this only checks plumbing, not realistic constants)."""
+    cal = _import_calibrate()
+    m = cal.measure_profile([8], "micro-smoke")
+    assert m.alpha > 0 and m.alpha_c > 0 and m.alpha_hop > 0
+    assert m.beta > 0 and m.local_rate > 0
+    assert m.meta["microbench"]["p"] == [8]
+    m2 = CostModel.from_json(m.to_json())
+    assert m2 == m
+    assert selection.select_algorithm(8, 8, model=m2) in \
+        ("gatherm", "rfis", "rquick", "rams")
+
+
+def test_fit_profile_floors_unidentified_parameters():
+    cal = _import_calibrate()
+    # every cell has zero fused collectives: α_c / α_hop unidentifiable
+    cells = [{"p2p": k, "fused": 0, "hops": 0.0, "wire_words": 100.0 * k,
+              "local_words": 10.0 * k, "seconds": 2e-6 * k + 8e-9 * k}
+             for k in range(1, 30)]
+    model = cal.fit_profile(cells, "degenerate")
+    assert model.alpha_c > 0 and model.alpha_hop > 0
+    assert model.alpha > 0 and model.local_rate > 0
