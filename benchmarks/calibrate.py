@@ -296,9 +296,35 @@ def run_sweep(ps, exps_override, iters: int):
     return cells
 
 
+SUBGROUP_PS = (4, 16, 64)
+SUBGROUP_DS = (1, 2, 4)
+
+
+def subgroup_rows(model: CostModel, npp: int = 32):
+    """The "Subgroup sort" grid: per-PE counted collective traces of the
+    auto-selected algorithm (under ``model``) over (d, p_sort) sim meshes.
+
+    Deterministic (``trace_collectives`` counts at trace time, no
+    wall-clock), so ``tools/check_docs.py`` can diff the regenerated file.
+    The point of the grid: the per-PE trace is **independent of d** —
+    every collective resolves relative to the sort axis, so adding data
+    rows multiplies tenants, not per-PE communication.
+    """
+    rows = []
+    for p in SUBGROUP_PS:
+        n = npp * p
+        algo = selection.select_algorithm(n, p, model=model)
+        for d in SUBGROUP_DS:
+            tr = trace_collectives(n, p, algo, d=d)
+            rows.append((p, d, n, algo, tr.p2p_launches, tr.fused_launches,
+                         tr.wire_bytes()))
+    return rows
+
+
 def write_experiments(path: str, model: CostModel):
     """Regenerate EXPERIMENTS.md: the regime tables ``selection.py``'s
-    docstring points at, under the given machine profile."""
+    docstring points at, the subgroup-sort grid, and the profile-JSON
+    schema, under the given machine profile."""
     lines = [
         "# EXPERIMENTS",
         "",
@@ -310,6 +336,9 @@ def write_experiments(path: str, model: CostModel):
         "PYTHONPATH=src python benchmarks/calibrate.py --experiments-only \\",
         "    [--profile profiles/<machine>.json]",
         "```",
+        "",
+        "(CI's docs job diffs this file against the regenerated output —",
+        "edit by rerunning the command, not by hand.)",
         "",
         f"Machine profile: **{model.name}** "
         f"(α={model.alpha:.3g}s, α_c={model.alpha_c:.3g}s, "
@@ -328,6 +357,60 @@ def write_experiments(path: str, model: CostModel):
         seq = " → ".join([rows[0][1]] + [w for _, _, w in
                                          _winner_sequence(rows)])
         lines += ["", f"Regime sequence: {seq}", ""]
+
+    lines += [
+        "## Subgroup sort (p_sort × d)",
+        "",
+        "Batched `psort` over a (d, p_sort) mesh sorts each of the d rows",
+        "within its own sort-axis subgroup (`backend=\"sim\"` shown; the",
+        "shard_map path shards the same body over a 2-D device mesh).  The",
+        "cells are the **per-PE counted collective traces**",
+        "(`repro.core.api.trace_collectives(n, p, algo, d=d)`) of the",
+        "auto-selected algorithm at n/p = 32: identical down the d column",
+        "because every collective resolves relative to the named sort axis",
+        "— data-axis rows are isolated tenants, adding rows adds zero",
+        "per-PE communication.",
+        "",
+        "| p_sort | d | n (per row) | algorithm | p2p launches "
+        "| fused launches | wire bytes/PE |",
+        "|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for p, dd, n, algo, p2p, fused, wire in subgroup_rows(model):
+        lines.append(f"| {p} | {dd} | {n} | {algo} | {p2p} | {fused} "
+                     f"| {wire} |")
+
+    lines += [
+        "",
+        "## `profiles/*.json` schema",
+        "",
+        "A profile is one serialized `repro.core.selection.CostModel`",
+        "(`CostModel.load(path)` / `model.save(path)` round-trip):",
+        "",
+        "| field | type | meaning |",
+        "|---|---|---|",
+        "| `name` | str | profile id, conventionally `<os>-<arch>-<backend>` |",
+        "| `alpha` | float s | per point-to-point step "
+        "(collective-permute launch + link latency) |",
+        "| `alpha_c` | float s | per fused-collective launch "
+        "(all_gather / psum / all_to_all) |",
+        "| `alpha_hop` | float s | per torus hop; fused collectives are "
+        "charged `alpha_hop · p^(1/3)` pipeline fill |",
+        "| `beta` | float s/word | per 32-bit word on the wire |",
+        "| `local_rate` | float words/s | local sort/merge/partition "
+        "throughput |",
+        "| `slot_overhead` | float | static slot provisioning factor of "
+        "the a2a exchanges |",
+        "| `meta` | object | free-form provenance — `microbench` (the "
+        "primitive measurements the constants came from), `sweep_fit` "
+        "(whole-program NNLS diagnostic: `r2`, `theta`, `features`, "
+        "`n_cells`, host, backend) |",
+        "",
+        "Profiles are **measured, not hand-edited**: "
+        "`benchmarks/calibrate.py` writes them from primitive",
+        "microbenchmarks (phase 1) and stashes the sweep regression in "
+        "`meta` (phase 2); unknown top-level fields are rejected at load.",
+        "",
+    ]
     with open(path, "w") as f:
         f.write("\n".join(lines))
     return path

@@ -19,6 +19,16 @@ Execution backends (``backend=``):
     ``repro.core.comm``, lifting the device cap (p = 64–1024 emulated PEs).
 Both backends trace the identical body with identical PRNG folding, so
 their outputs match bit for bit at equal (n, p, algorithm, seed).
+
+Multi-axis meshes: a 2-D ``keys`` array of shape (d, n) is a batch of d
+independent sort problems laid out over a (``data_axis``, ``axis``) mesh —
+each row is sorted within its own p-sized sort-axis subgroup and the data
+axis never communicates.  Because every collective resolves relative to
+the named sort axis (see ``repro.core.comm.Collectives``), row r of the
+batched output is bit-identical to a 1-D ``psort`` of row r at the same
+(n, p, algorithm, seed).  On ``backend="shard_map"`` the mesh is a real
+2-D device mesh (``repro.dist.sharding.sort_mesh``); on ``backend="sim"``
+it is emulated via ``comm.sim_map(..., mesh=(d, p))``.
 """
 from __future__ import annotations
 
@@ -33,7 +43,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.runtime.compat import shard_map
 
 from . import comm, selection
-from .types import SortShard, key_to_uint, make_shard, pad_value, uint_to_key
+from .types import (SortShard, key_to_uint, make_shard, pad_value,
+                    uint_to_key, use_pallas_local_sort)
 
 BACKENDS = ("shard_map", "sim")
 
@@ -107,9 +118,10 @@ def _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw):
 
 
 @partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
-                                   "out_capacity", "mesh", "algo_kw"))
+                                   "out_capacity", "mesh", "algo_kw",
+                                   "pallas"))
 def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
-               out_capacity, algo_kw):
+               out_capacity, algo_kw, pallas):
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
 
     def blk(keys_blk, count_blk):
@@ -123,30 +135,105 @@ def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
 
 
 @partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
-                                   "out_capacity", "algo_kw"))
+                                   "out_capacity", "algo_kw", "pallas"))
 def _psort_sim_jit(keys2d, counts, axis_name, p, algorithm, capacity,
-                   out_capacity, algo_kw):
+                   out_capacity, algo_kw, pallas):
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
     return comm.sim_map(body, axis_name, p)(keys2d, counts)
 
 
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis", "p",
+                                   "capacity", "out_capacity", "mesh",
+                                   "algo_kw", "pallas"))
+def _psort2_jit(keys3d, counts, mesh, axis_name, data_axis, p, algorithm,
+                capacity, out_capacity, algo_kw, pallas):
+    """Batched psort over the sort axis of a 2-D (data, sort) device mesh."""
+    body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
+
+    def blk(keys_blk, count_blk):          # (1, 1, per), (1, 1)
+        k, i, c, o = body(keys_blk[0, 0], count_blk[0, 0])
+        return (k[None, None], i[None, None], c[None, None], o[None, None])
+
+    out = shard_map(blk, mesh=mesh,
+                    in_specs=(P(data_axis, axis_name),
+                              P(data_axis, axis_name)),
+                    out_specs=(P(data_axis, axis_name),) * 4)(keys3d, counts)
+    return out
+
+
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis", "d",
+                                   "p", "capacity", "out_capacity", "algo_kw",
+                                   "pallas"))
+def _psort2_sim_jit(keys3d, counts, axis_name, data_axis, d, p, algorithm,
+                    capacity, out_capacity, algo_kw, pallas):
+    body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
+    return comm.sim_map(body, axis_name, p, mesh=(d, p),
+                        data_axis=data_axis)(keys3d, counts)
+
+
 def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
           mesh: Optional[Mesh] = None, axis: str = "sort",
+          data_axis: str = "data",
           capacity_factor: float = 2.0, return_info: bool = False,
           backend: str = "shard_map",
           cost_model: Optional[selection.CostModel] = None, **algo_kw):
-    """Sort a host array with p emulated PEs.  Returns the sorted array
-    (and an info dict with overflow / balance when ``return_info``).
+    """Sort a host array over the ``axis`` mesh axis with p (emulated) PEs.
+
+    Returns the sorted array (and an info dict with overflow / balance when
+    ``return_info``).  1-D ``keys`` of shape (n,) are one global sort
+    problem; 2-D ``keys`` of shape (d, n) are d **independent** problems
+    laid out over a (``data_axis``, ``axis``) mesh — each row is sorted
+    within its own sort-axis subgroup, bit-identical to d separate 1-D
+    calls (the multi-axis-mesh contract, see ``docs/ARCHITECTURE.md``).
+
+    ``mesh`` (``backend="shard_map"`` only) supplies the device mesh: 1-D
+    over ``axis`` for 1-D keys, 2-D over (``data_axis``, ``axis``) for 2-D
+    keys (default: ``repro.dist.sharding.sort_mesh``).  ``backend="sim"``
+    runs meshless and needs an explicit ``p``; the data-axis extent is
+    read off ``keys.shape[0]``.
 
     ``cost_model`` parameterizes ``algorithm="auto"``: a
     :class:`repro.core.selection.CostModel` machine profile (e.g. loaded
     from a ``profiles/<machine>.json`` written by
     ``benchmarks/calibrate.py``); defaults to the prior profile.
+
+    >>> import numpy as np
+    >>> from repro.core.api import psort
+    >>> x = np.array([5, 3, 1, 4, 2, 9, 8, 6], np.int32)
+    >>> np.asarray(psort(x, p=4, algorithm="rquick", backend="sim"))
+    array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
+
+    A batch of rows sorts within per-row subgroups of a (d, p) mesh — the
+    rows never exchange elements:
+
+    >>> xs = np.stack([x, x[::-1] * 10])
+    >>> np.asarray(psort(xs, p=4, algorithm="rquick", backend="sim"))
+    array([[ 1,  2,  3,  4,  5,  6,  8,  9],
+           [10, 20, 30, 40, 50, 60, 80, 90]], dtype=int32)
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    keys = jnp.asarray(keys)
+    if keys.ndim not in (1, 2):
+        raise ValueError(f"keys must be 1-D (one sort) or 2-D (a batch of "
+                         f"independent sorts); got shape {keys.shape}")
+    batched = keys.ndim == 2
+    d = keys.shape[0] if batched else 1
     if backend == "shard_map":
-        mesh = mesh or default_mesh(p, axis)
+        if batched:
+            if mesh is None:
+                from repro.dist.sharding import sort_mesh
+                mesh = sort_mesh(p, d=d, axis=axis, data_axis=data_axis)
+            for a in (data_axis, axis):
+                if a not in mesh.shape:
+                    raise ValueError(f"2-D keys need a mesh with axes "
+                                     f"({data_axis!r}, {axis!r}); mesh has "
+                                     f"{tuple(mesh.shape)}")
+            if mesh.shape[data_axis] != d:
+                raise ValueError(f"keys.shape[0]={d} != mesh.shape"
+                                 f"[{data_axis!r}]={mesh.shape[data_axis]}")
+        else:
+            mesh = mesh or default_mesh(p, axis)
         p = mesh.shape[axis]
     else:
         if mesh is not None:
@@ -155,8 +242,7 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
             raise ValueError("backend='sim' needs an explicit p")
     if p & (p - 1):
         raise ValueError(f"p={p} must be a power of two (hypercube layout)")
-    keys = jnp.asarray(keys)
-    n = keys.shape[0]
+    n = keys.shape[-1]
     orig_dtype = keys.dtype
     u = key_to_uint(keys)
 
@@ -167,32 +253,60 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     out_capacity = _out_capacity(algorithm, n, p, per, capacity)
 
     pad = pad_value(u.dtype)
-    flat = jnp.full((p * per,), pad, u.dtype).at[:n].set(u)
-    keys2d = flat.reshape(p, per)
-    counts = jnp.minimum(jnp.maximum(n - per * jnp.arange(p), 0), per).astype(jnp.int32)
-
+    row_counts = jnp.minimum(jnp.maximum(n - per * jnp.arange(p), 0),
+                             per).astype(jnp.int32)
     kw = tuple(sorted(algo_kw.items()))
-    if backend == "shard_map":
-        keys_out, idx_out, counts_out, overflow = _psort_jit(
-            keys2d, counts, mesh, axis, p, algorithm, capacity, out_capacity, kw)
+    # jit caches key on the Pallas local-sort flag: the flag is read at
+    # trace time, so without this a cached executable would silently
+    # ignore a toggle between calls of the same signature.
+    pl = use_pallas_local_sort()
+    if batched:
+        flat = jnp.full((d, p * per), pad, u.dtype).at[:, :n].set(u)
+        keys3d = flat.reshape(d, p, per)
+        counts = jnp.broadcast_to(row_counts, (d, p))
+        if backend == "shard_map":
+            keys_out, idx_out, counts_out, overflow = _psort2_jit(
+                keys3d, counts, mesh, axis, data_axis, p, algorithm,
+                capacity, out_capacity, kw, pallas=pl)
+        else:
+            keys_out, idx_out, counts_out, overflow = _psort2_sim_jit(
+                keys3d, counts, axis, data_axis, d, p, algorithm,
+                capacity, out_capacity, kw, pallas=pl)
     else:
-        keys_out, idx_out, counts_out, overflow = _psort_sim_jit(
-            keys2d, counts, axis, p, algorithm, capacity, out_capacity, kw)
-    keys_out = np.asarray(keys_out)
-    counts_out = np.asarray(counts_out)
+        flat = jnp.full((p * per,), pad, u.dtype).at[:n].set(u)
+        keys2d = flat.reshape(p, per)
+        if backend == "shard_map":
+            keys_out, idx_out, counts_out, overflow = _psort_jit(
+                keys2d, row_counts, mesh, axis, p, algorithm, capacity,
+                out_capacity, kw, pallas=pl)
+        else:
+            keys_out, idx_out, counts_out, overflow = _psort_sim_jit(
+                keys2d, row_counts, axis, p, algorithm, capacity,
+                out_capacity, kw, pallas=pl)
+        keys_out, idx_out = keys_out[None], idx_out[None]
+        counts_out, overflow = counts_out[None], overflow[None]
+
+    keys_out = np.asarray(keys_out)                # (d, p, out_capacity)
+    counts_out = np.asarray(counts_out)            # (d, p)
     pe_range = range(1) if algorithm == "allgatherm" else range(p)
-    parts = [keys_out[i, :counts_out[i]] for i in pe_range]
-    result = uint_to_key(jnp.asarray(np.concatenate(parts)), orig_dtype)
+    rows = [np.concatenate([keys_out[r, i, :counts_out[r, i]]
+                            for i in pe_range]) for r in range(d)]
+    result = uint_to_key(jnp.asarray(np.stack(rows) if batched else rows[0]),
+                         orig_dtype)
     if return_info:
-        idx_parts = [np.asarray(idx_out)[i, :counts_out[i]] for i in range(p)]
+        idx_out = np.asarray(idx_out)
+        perms = [np.concatenate([idx_out[r, i, :counts_out[r, i]]
+                                 for i in range(p)]) if n
+                 else np.zeros((0,), np.uint32) for r in range(d)]
         info = {
             "algorithm": algorithm,
             "backend": backend,
-            "counts": counts_out,
+            "counts": counts_out if batched else counts_out[0],
             "overflow": int(np.asarray(overflow).sum()),
             "balance": counts_out.max() / max(1.0, n / p),
-            "perm": np.concatenate(idx_parts) if n else np.zeros((0,), np.uint32),
+            "perm": np.stack(perms) if batched else perms[0],
             "n": n,
+            "d": d,
         }
         return result, info
     return result
@@ -205,7 +319,7 @@ def _out_capacity(algorithm: str, n: int, p: int, per: int, capacity: int) -> in
 
 
 def trace_collectives(n: int, p: int, algorithm: str,
-                      capacity_factor: float = 2.0,
+                      capacity_factor: float = 2.0, d: int = 1,
                       **algo_kw) -> comm.CommTrace:
     """Count the collectives one ``psort`` call would launch, per PE.
 
@@ -215,6 +329,19 @@ def trace_collectives(n: int, p: int, algorithm: str,
     counts, payload bytes and group sizes per primitive — the measured
     counterpart of the paper's Table I, and the feature vector
     ``benchmarks/calibrate.py`` fits the :class:`CostModel` against.
+
+    ``d > 1`` traces the batched body over a (d, p) sim mesh instead.
+    Collectives resolve relative to the sort axis, so the per-PE trace is
+    independent of the data-axis extent — the subgroup-isolation property
+    EXPERIMENTS.md's "Subgroup sort" grid is generated from.
+
+    >>> from repro.core.api import trace_collectives
+    >>> t1 = trace_collectives(64, 8, "bitonic")
+    >>> t1.counts()["ppermute"] >= 6            # d·(d+1)/2 exchange rounds
+    True
+    >>> t2 = trace_collectives(64, 8, "bitonic", d=4)
+    >>> t2.summary() == t1.summary()            # per-PE trace: no d term
+    True
     """
     if p & (p - 1):
         raise ValueError(f"p={p} must be a power of two (hypercube layout)")
@@ -224,8 +351,11 @@ def trace_collectives(n: int, p: int, algorithm: str,
     body = _sort_body("sort", p, algorithm, capacity, out_capacity,
                       tuple(sorted(algo_kw.items())))
     counter = comm.CountingCollectives(comm.SIM)
-    runner = comm.sim_map(body, "sort", p, impl=counter)
+    mesh = (d, p) if d > 1 else None
+    runner = comm.sim_map(body, "sort", p, impl=counter, mesh=mesh,
+                          data_axis="data" if d > 1 else None)
+    lead = (d, p) if d > 1 else (p,)
     jax.eval_shape(runner,
-                   jax.ShapeDtypeStruct((p, per), jnp.uint32),
-                   jax.ShapeDtypeStruct((p,), jnp.int32))
+                   jax.ShapeDtypeStruct(lead + (per,), jnp.uint32),
+                   jax.ShapeDtypeStruct(lead, jnp.int32))
     return counter.trace

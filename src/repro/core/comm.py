@@ -20,7 +20,10 @@ to the *current* :class:`Collectives` implementation:
     p = 256), the same result is produced *chunked*: a ``lax.scan`` ring of
     ``ppermute`` steps moves one PE block per iteration, so peak memory is
     the output size O(p·g) instead of O(p²).  This lifts the sim backend to
-    p = 1024 emulated PEs in one process.
+    p = 1024 emulated PEs in one process.  :func:`sim_map` also has a
+    ``mesh=(d, p)`` mode emulating a 2-D (data × sort) device mesh: the
+    data axis is an outer vmap, and every collective resolves within the
+    row's p-sized sort subgroup.
 
   * :class:`CountingCollectives` — a decorator backend: wraps any
     ``Collectives``, forwards every call unchanged, and records a structured
@@ -46,7 +49,30 @@ import numpy as np
 
 
 class Collectives:
-    """Interface of the named-axis collectives the library relies on."""
+    """Interface of the named-axis collectives the library relies on.
+
+    Every method takes an ``axis_name`` and resolves **relative to that
+    named axis only** — never to the full device set.  On a multi-axis
+    mesh (say ``("data", "sort")``), ``axis_index(x, "sort")`` is the
+    position *within* the sort axis, ``all_gather(x, "sort")`` gathers the
+    ``mesh.shape["sort"]`` participants that share this PE's data-axis
+    coordinate, and ``axis_index_groups`` lists indices *along the named
+    axis* (per the ``jax.lax`` contract), so one grouped collective runs
+    independently inside every subgroup of every data-axis slice.  This is
+    what lets the sorting algorithms — which only ever receive
+    ``(axis_name, p)`` with ``p`` = the sort-axis size — run unchanged
+    within named subgroups of a 2-D mesh (see :func:`sim_map`'s ``mesh=``
+    mode and ``psort`` on batched inputs).
+
+    Implementations:
+
+    * :class:`LaxCollectives` — forwards to ``jax.lax`` (named-axis
+      resolution is the ``shard_map`` semantics);
+    * :class:`SimCollectives` — the same semantics under ``jax.vmap``
+      with grouped variants built from static tables;
+    * :class:`CountingCollectives` — forwards to another backend and
+      records a :class:`CommTrace`.
+    """
 
     name = "abstract"
 
@@ -502,7 +528,9 @@ def all_to_all(x, axis_name, split_axis=0, concat_axis=0,
 
 
 def sim_map(body, axis_name: str, p: Optional[int] = None,
-            impl: Optional[Collectives] = None):
+            impl: Optional[Collectives] = None,
+            mesh: Optional[Sequence[int]] = None,
+            data_axis: Optional[str] = None):
     """Run a per-PE SPMD ``body`` over a leading PE axis in one process.
 
     ``body`` is the same function one would pass to ``shard_map`` minus the
@@ -518,6 +546,33 @@ def sim_map(body, axis_name: str, p: Optional[int] = None,
     keeps counting (re-wrapped over :data:`SIM` with the same trace), an
     ambient ``SimCollectives`` is kept as-is, and anything else (the
     shard_map default) becomes :data:`SIM`.
+
+    **Multi-axis mode** — ``mesh=(d, p)`` emulates a 2-D device mesh
+    ``(data_axis, axis_name)``: arguments carry two leading axes ``(d, p,
+    ...)`` and the body runs once per (data, sort) coordinate.  Collectives
+    inside the body name ``axis_name`` only, so they resolve within each
+    row's p-sized sort subgroup — the ``d`` rows never communicate, exactly
+    like ``shard_map`` over the sort axis of a 2-D mesh.  Implementation:
+    the sort axis is the inner ``vmap(axis_name=...)`` (which gives the
+    collectives their named axis) and the data axis an outer ``vmap``
+    (named ``data_axis`` if given); vmap's collective batching rules carry
+    the sort-axis collectives over the data axis unchanged, so each row is
+    bit-identical to a standalone ``sim_map(body, axis_name, p)`` run.
+
+    Sort each row of a batch within its own sort-axis subgroup:
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core import comm
+    >>> d, p = 2, 4
+    >>> def body(v):                       # v: this PE's () block
+    ...     lo = comm.all_gather(v, "sort")       # (p,): my subgroup only
+    ...     return jnp.sort(lo)[comm.axis_index("sort")]
+    >>> x = jnp.array([[3, 1, 0, 2],
+    ...                [7, 5, 6, 4]], jnp.int32)
+    >>> run = comm.sim_map(body, "sort", p, mesh=(d, p), data_axis="data")
+    >>> run(x)
+    Array([[0, 1, 2, 3],
+           [4, 5, 6, 7]], dtype=int32)
     """
 
     def _resolve(cur: Collectives) -> Collectives:
@@ -527,12 +582,25 @@ def sim_map(body, axis_name: str, p: Optional[int] = None,
             return CountingCollectives(_resolve(cur.inner), cur.trace)
         return SIM
 
+    if mesh is not None:
+        d_sz, p_sz = (int(v) for v in mesh)
+        if p is not None and p != p_sz:
+            raise ValueError(f"p={p} inconsistent with mesh={tuple(mesh)}")
+        p = p_sz
+    else:
+        d_sz = None
+
     def run(*args):
+        lead = (d_sz, p) if d_sz is not None else (p,)
         if p is not None:
             for a in jax.tree.leaves(args):
-                assert a.shape[0] == p, (a.shape, p)
+                assert a.shape[:len(lead)] == lead, (a.shape, lead)
         backend = impl if impl is not None else _resolve(current())
         with use(backend):
-            return jax.vmap(body, axis_name=axis_name)(*args)
+            f = jax.vmap(body, axis_name=axis_name)
+            if d_sz is not None:
+                f = jax.vmap(f, axis_name=data_axis) if data_axis \
+                    else jax.vmap(f)
+            return f(*args)
 
     return run

@@ -20,6 +20,7 @@ all-ones word.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Dict, Optional
 
@@ -135,16 +136,38 @@ def make_shard(keys: jax.Array, count=None, capacity: Optional[int] = None,
 
 
 # Opt-in Pallas local-sort path (the TPU hot-spot kernel).  Off by default
-# on CPU because interpret-mode execution is slow; enabled by the kernel
-# integration tests and, on real TPU, by the launcher.
-USE_PALLAS_LOCAL_SORT = False
+# on CPU because interpret-mode execution is slow.  The launcher, the tests
+# and ad-hoc runs all toggle it the same way: the ``REPRO_PALLAS_LOCAL_SORT``
+# environment variable (read at trace time, so ``monkeypatch.setenv`` works),
+# or programmatically via :func:`set_pallas_local_sort`.
+_PALLAS_LOCAL_SORT_OVERRIDE: Optional[bool] = None
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def use_pallas_local_sort() -> bool:
+    """Is the Pallas local-sort kernel enabled?  Programmatic override
+    (:func:`set_pallas_local_sort`) wins over the ``REPRO_PALLAS_LOCAL_SORT``
+    environment variable; default off."""
+    if _PALLAS_LOCAL_SORT_OVERRIDE is not None:
+        return _PALLAS_LOCAL_SORT_OVERRIDE
+    return os.environ.get("REPRO_PALLAS_LOCAL_SORT", "").lower() in _TRUTHY
+
+
+def set_pallas_local_sort(enabled: Optional[bool]) -> Optional[bool]:
+    """Force the Pallas local-sort path on/off (``None`` = defer to the
+    environment variable again).  Returns the previous override so callers
+    can restore it."""
+    global _PALLAS_LOCAL_SORT_OVERRIDE
+    prev = _PALLAS_LOCAL_SORT_OVERRIDE
+    _PALLAS_LOCAL_SORT_OVERRIDE = enabled
+    return prev
 
 
 def local_sort(shard: SortShard) -> SortShard:
     """Sort a shard's valid elements ascending (stable w.r.t. input order)."""
     pad = shard.pad
     keys = jnp.where(shard.valid_mask(), shard.keys, pad)
-    if USE_PALLAS_LOCAL_SORT and _pallas_sortable(shard):
+    if use_pallas_local_sort() and _pallas_sortable(shard):
         from repro.kernels.bitonic import local_sort_fast
         if not shard.vals:
             return shard.replace(keys=local_sort_fast(keys))

@@ -4,7 +4,10 @@ Axis roles (see ``repro.launch.mesh``):
   * ``pod``/``data`` — batch parallelism (gradients reduced across);
   * ``model``        — tensor parallelism (weights split, GSPMD inserts the
     collectives);
-  * ``sort``         — the 1-D sorting meshes; never used by the model code.
+  * ``sort``         — the sorting meshes; never used by the model code.
+    :func:`sort_mesh` builds the (data, sort) 2-D layout for batched
+    ``psort``: d independent sort problems, each over a p-sized sort-axis
+    subgroup (collectives named over ``sort`` stay inside a row).
 
 ``make_shardings`` assigns a :class:`NamedSharding` to every parameter /
 optimizer leaf with one shape-driven rule: split the largest
@@ -22,6 +25,25 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def sort_mesh(p: Optional[int] = None, d: int = 1, *, axis: str = "sort",
+              data_axis: str = "data", devices=None) -> Mesh:
+    """A (d, p) device mesh with axes (``data_axis``, ``axis``).
+
+    The layout batched ``psort`` sorts over: row r of a (d, n) key batch
+    lives on the r-th data-axis slice and is sorted by the p devices of its
+    sort-axis subgroup.  ``p`` defaults to ``len(devices) // d`` — every
+    available device joins some subgroup.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if d < 1:
+        raise ValueError(f"d={d} must be >= 1")
+    p = p if p is not None else len(devs) // d
+    if p < 1 or d * p > len(devs):
+        raise ValueError(f"requested mesh ({d}, {p}) needs {d * p} devices; "
+                         f"have {len(devs)}")
+    return Mesh(np.array(devs[:d * p]).reshape(d, p), (data_axis, axis))
 
 
 def data_axes_of(mesh: Optional[Mesh]) -> Tuple[str, ...]:

@@ -123,23 +123,20 @@ def moe_dense(x, p, cfg):
     return y, aux
 
 
-def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
-                    capacity_factor: float = 2.0, slot_factor: float = 2.0):
-    """EP layout: distributed sort-based dispatch over ``model_axis``.
+def _ep_dispatch_body(cfg, model_axis: str, ep: int,
+                      capacity_factor: float, slot_factor: float):
+    """The per-PE EP dispatch body, shared by ``moe_ep_shardmap`` (real
+    2-D device mesh) and ``moe_ep_sim`` (emulated (d, ep) mesh).
 
-    x: (B, S, D) with batch sharded over data_axes; inside the shard_map the
-    sequence is additionally split over the model axis, items are exchanged
-    by expert ownership with the paper's slotted all-to-all, computed, and
-    routed back (vals carry the bf16 feature vectors as 2-D payload).
+    Every collective inside names ``model_axis`` only, so the dispatch
+    sorts/exchanges within the ep-sized expert-parallel subgroup of
+    whatever mesh surrounds it — the data axis never communicates.
     """
-    from jax.sharding import PartitionSpec as P
     from repro.core import comm
     from repro.core.hypercube import _alltoall_route
-    from repro.core.types import SortShard, make_shard
-    from repro.runtime.compat import shard_map
+    from repro.core.types import SortShard
 
     E, k = cfg.n_experts, cfg.top_k
-    ep = mesh.shape[model_axis]
     e_per = E // ep
     assert e_per >= 1
 
@@ -194,6 +191,28 @@ def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
         y = y[:-1].astype(x_blk.dtype).reshape(B, S_loc, D)
         return y, aux[None], (drop1 + drop2)[None]
 
+    return body
+
+
+def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
+                    capacity_factor: float = 2.0, slot_factor: float = 2.0):
+    """EP layout: distributed sort-based dispatch over ``model_axis``.
+
+    x: (B, S, D) with batch sharded over data_axes; inside the shard_map the
+    sequence is additionally split over the model axis, items are exchanged
+    by expert ownership with the paper's slotted all-to-all, computed, and
+    routed back (vals carry the bf16 feature vectors as 2-D payload).
+    ``mesh`` may carry any number of data axes — the dispatch collectives
+    are relative to ``model_axis``, so each (data...)-slice's ep-subgroup
+    sorts independently.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.compat import shard_map
+
+    ep = mesh.shape[model_axis]
+    body = _ep_dispatch_body(cfg, model_axis, ep, capacity_factor,
+                             slot_factor)
+
     dp = P(data_axes, model_axis, None)
     y, aux, drops = shard_map(
         body, mesh=mesh,
@@ -201,6 +220,49 @@ def moe_ep_shardmap(x, p, cfg, mesh, *, data_axes, model_axis="model",
                   P(model_axis, None, None), P(model_axis, None, None)),
         out_specs=(dp, P(model_axis), P(model_axis)),
     )(x, p["router"], p["up"], p["gate"], p["down"])
+    return y, jnp.mean(aux)
+
+
+def moe_ep_sim(x, p, cfg, *, d: int = 1, ep: Optional[int] = None,
+               model_axis: str = "expert",
+               capacity_factor: float = 2.0, slot_factor: float = 2.0):
+    """EP dispatch on the **sim backend** over an emulated (d, ep) mesh.
+
+    Runs the exact ``moe_ep_shardmap`` body with
+    ``comm.sim_map(..., mesh=(d, ep))``: the batch splits into d data-axis
+    rows, the sequence into ep expert-parallel blocks, and each row's
+    dispatch sorts within its own ep-sized subgroup — the multi-tenant
+    layout (many independent MoE replicas per host) without needing
+    d·ep physical devices.  Returns (y, aux) like the shard_map path.
+    """
+    from repro.core import comm
+
+    B, S, D = x.shape
+    E = cfg.n_experts
+    ep = ep or E
+    if B % d or S % ep or E % ep:
+        raise ValueError(f"B={B} S={S} E={E} not divisible by (d={d}, "
+                         f"ep={ep})")
+    e_per = E // ep
+    body = _ep_dispatch_body(cfg, model_axis, ep, capacity_factor,
+                             slot_factor)
+    # (B, S, D) → (d, ep, B/d, S/ep, D): batch over data rows, sequence
+    # over expert-parallel blocks — the sim image of the shard_map specs
+    # P(data_axes, model_axis, None).
+    xb = x.reshape(d, B // d, ep, S // ep, D)
+    xb = jnp.moveaxis(xb, 2, 1)
+
+    def tile(w, split_experts):
+        if split_experts:                  # (E, ...) → per-PE (e_per, ...)
+            w = w.reshape((ep, e_per) + w.shape[1:])
+        else:                              # replicated across the mesh
+            w = jnp.broadcast_to(w[None], (ep,) + w.shape)
+        return jnp.broadcast_to(w[None], (d,) + w.shape)
+
+    run = comm.sim_map(body, model_axis, ep, mesh=(d, ep), data_axis="data")
+    y, aux, drops = run(xb, tile(p["router"], False), tile(p["up"], True),
+                        tile(p["gate"], True), tile(p["down"], True))
+    y = jnp.moveaxis(y, 1, 2).reshape(B, S, D)   # (d, ep, b, s, D) → (B, S, D)
     return y, jnp.mean(aux)
 
 

@@ -59,6 +59,38 @@ def test_ep_dispatch_skewed_router(setup):
     assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
 
 
+def test_ep_sim_matches_shardmap_and_dense(setup):
+    """The same EP dispatch body on an emulated (d, ep) sim mesh: bitwise
+    equal to the shard_map run at the same layout, allclose to dense, and
+    runnable at d·ep beyond the physical device count."""
+    cfg, p, x = setup
+    devs = jax.devices()[:4]
+    mesh = Mesh(np.array(devs).reshape(2, 2), ("data", "model"))
+    with mesh:
+        y_ep, _ = jax.jit(lambda xx, pp: M.moe_ep_shardmap(
+            xx, pp, cfg, mesh, data_axes=("data",), capacity_factor=16.0,
+            slot_factor=16.0))(x, p)
+    y_sim, _ = jax.jit(lambda xx, pp: M.moe_ep_sim(
+        xx, pp, cfg, d=2, ep=2, capacity_factor=16.0,
+        slot_factor=16.0))(x, p)
+    np.testing.assert_array_equal(np.asarray(y_sim), np.asarray(y_ep))
+
+    # d·ep = 2·4 = 8 emulated PEs with ep = E (every expert its own PE)
+    y8, _ = jax.jit(lambda xx, pp: M.moe_ep_sim(
+        xx, pp, cfg, d=2, ep=cfg.n_experts, capacity_factor=16.0,
+        slot_factor=16.0))(x, p)
+    y_dense, _ = M.moe_dense(x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y8, np.float32),
+                               np.asarray(y_dense, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_ep_sim_rejects_indivisible_layout(setup):
+    cfg, p, x = setup
+    with pytest.raises(ValueError):
+        M.moe_ep_sim(x, p, cfg, d=3, ep=2)       # B=2 not divisible by 3
+
+
 def test_group_by_expert_capacity():
     eids = jnp.asarray(np.array([0, 0, 0, 1, 0, 2, 0], np.int32))
     slot, kept = M._group_by_expert(eids, 4, capacity=2)

@@ -1,0 +1,193 @@
+"""Multi-axis mesh contract: sorting within named subgroups of a 2-D mesh.
+
+The acceptance bar of the multi-axis PR: batched ``psort`` over the sort
+axis of a (d, p) mesh must be **bitwise identical** to d independent
+single-axis runs, for every algorithm, on both backends — shard_map over a
+real 2-D device mesh (d×p = 2×4 on the 8 emulated CPU devices) and the sim
+backend's ``sim_map(mesh=(d, p))`` mode (d×p = 4×64 emulated PEs).  Plus
+the grouped-collective edge cases *inside* mesh mode (single-member
+subgroups, subgroups spanning non-adjacent mesh positions, the counting
+decorator, the forced-ring chunked path), each cross-checked against
+per-row single-axis evaluation.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm
+from repro.core.api import psort, trace_collectives
+from repro.data.distributions import generate_instance
+from repro.dist.sharding import sort_mesh
+
+ALL_ALGOS = ["rquick", "rfis", "rams", "bitonic", "ssort", "gatherm",
+             "allgatherm"]
+
+
+def _rows(d, p, n_per, seed=3):
+    """d independent instances with different content per row."""
+    return np.stack([generate_instance("Uniform", p, n_per, seed=seed + r)
+                     .astype(np.int32) for r in range(d)])
+
+
+def _assert_rows_match_1d(xs, p, algorithm, backend):
+    """Batched run row r ≡ 1-D run of row r (keys, perm, counts, overflow)."""
+    out2, info2 = psort(xs, p=p, algorithm=algorithm, return_info=True,
+                        backend=backend)
+    out2 = np.asarray(out2)
+    assert info2["overflow"] == 0
+    for r in range(xs.shape[0]):
+        out1, info1 = psort(xs[r], p=p, algorithm=algorithm,
+                            return_info=True, backend=backend)
+        assert (out2[r] == np.asarray(out1)).all(), (algorithm, backend, r)
+        assert (info2["perm"][r] == info1["perm"]).all(), (algorithm, r)
+        assert (info2["counts"][r] == info1["counts"]).all(), (algorithm, r)
+        assert (out2[r] == np.sort(xs[r])).all(), (algorithm, r)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: all seven algorithms, both backends.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ALL_ALGOS)
+def test_shard_map_2x4_bitwise_vs_single_axis(algorithm):
+    d, p = 2, 4
+    xs = _rows(d, p, 37 * p)
+    _assert_rows_match_1d(xs, p, algorithm, "shard_map")
+
+
+@pytest.mark.parametrize("algorithm", ["rquick", "rams"])
+def test_sim_4x64_bitwise_vs_single_axis(algorithm):
+    d, p = 4, 64
+    xs = _rows(d, p, 24 * p)
+    _assert_rows_match_1d(xs, p, algorithm, "sim")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm",
+                         [a for a in ALL_ALGOS if a not in ("rquick", "rams")])
+def test_sim_4x64_bitwise_vs_single_axis_full(algorithm):
+    d, p = 4, 64
+    xs = _rows(d, p, 24 * p)
+    _assert_rows_match_1d(xs, p, algorithm, "sim")
+
+
+def test_shard_map_explicit_mesh_and_defaults():
+    """An explicit sort_mesh and the implicit default agree bitwise."""
+    d, p = 2, 4
+    xs = _rows(d, p, 11 * p)
+    mesh = sort_mesh(p, d=d)
+    out_explicit = np.asarray(psort(xs, mesh=mesh, algorithm="rquick"))
+    out_default = np.asarray(psort(xs, algorithm="rquick"))
+    assert (out_explicit == out_default).all()
+    assert (out_explicit == np.sort(xs, axis=-1)).all()
+
+
+# ---------------------------------------------------------------------------
+# Grouped collectives inside sim_map(mesh=...): the edge cases of
+# tests/test_comm.py replayed within a (d, p) mesh and cross-checked
+# against per-row single-axis evaluation.
+# ---------------------------------------------------------------------------
+
+D, P = 3, 8
+STRIDED = [[0, 2, 4, 6], [1, 3, 5, 7]]         # non-adjacent mesh positions
+SINGLES = [[i] for i in range(P)]              # single-member subgroups
+CONTIG = [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+
+def _grouped_body(groups):
+    def fn(v):
+        g = comm.all_gather(v, "sort", axis_index_groups=groups, tiled=True)
+        s = comm.psum(v, "sort", axis_index_groups=groups)
+        a = comm.all_to_all(jnp.tile(v, (len(groups[0]),)), "sort",
+                            split_axis=0, concat_axis=0,
+                            axis_index_groups=groups, tiled=True)
+        return g, s, a
+    return fn
+
+
+def _mesh_vs_rows(fn, x, chunk_bytes=None):
+    """sim_map(mesh=(D, P)) ≡ per-row sim_map(p=P), leaf-by-leaf bitwise."""
+    impl = comm.SimCollectives(chunk_bytes=chunk_bytes) \
+        if chunk_bytes is not None else None
+    out = jax.jit(comm.sim_map(fn, "sort", P, impl=impl, mesh=(D, P),
+                               data_axis="data"))(x)
+    for r in range(D):
+        ref = jax.jit(comm.sim_map(fn, "sort", P, impl=impl))(x[r])
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a)[r], np.asarray(b))
+
+
+@pytest.mark.parametrize("gname,groups", [("strided", STRIDED),
+                                          ("singles", SINGLES),
+                                          ("contig", CONTIG)])
+def test_grouped_collectives_inside_mesh(gname, groups):
+    x = jnp.arange(D * P * 4, dtype=jnp.int32).reshape(D, P, 4) * 3 + 1
+    _mesh_vs_rows(_grouped_body(groups), x)
+
+
+@pytest.mark.parametrize("gname,groups", [("strided", STRIDED),
+                                          ("contig", CONTIG)])
+def test_grouped_collectives_inside_mesh_forced_ring(gname, groups):
+    """The chunked ring evaluation (chunk_bytes=0) under the mesh mode."""
+    x = jnp.arange(D * P * 4, dtype=jnp.int32).reshape(D, P, 4) * 3 + 1
+    _mesh_vs_rows(_grouped_body(groups), x, chunk_bytes=0)
+
+
+def test_counting_inside_mesh_mode():
+    """CountingCollectives under sim_map(mesh=...): the per-PE trace is
+    identical to the d = 1 trace — the data axis adds no communication."""
+    def fn(v):
+        g = comm.all_gather(v, "sort", axis_index_groups=CONTIG, tiled=True)
+        return g.sum() + comm.psum(v, "sort")
+
+    traces = []
+    for mesh, data_axis in ((None, None), ((D, P), "data")):
+        counter = comm.CountingCollectives(comm.SIM)
+        lead = (P,) if mesh is None else (D, P)
+        jax.eval_shape(comm.sim_map(fn, "sort", P, impl=counter, mesh=mesh,
+                                    data_axis=data_axis),
+                       jax.ShapeDtypeStruct(lead + (4,), jnp.int32))
+        traces.append(counter.trace)
+    assert traces[0].summary() == traces[1].summary()
+    assert traces[1].counts() == {"all_gather": 1, "psum": 1}
+
+
+def test_trace_collectives_d_invariance():
+    """The EXPERIMENTS.md subgroup-grid property, at API level."""
+    t1 = trace_collectives(32 * 16, 16, "rams")
+    t4 = trace_collectives(32 * 16, 16, "rams", d=4)
+    assert t1.summary() == t4.summary()
+
+
+# ---------------------------------------------------------------------------
+# Input validation and helpers.
+# ---------------------------------------------------------------------------
+
+
+def test_sort_mesh_shapes_and_errors():
+    m = sort_mesh(4, d=2)
+    assert dict(m.shape) == {"data": 2, "sort": 4}
+    m1 = sort_mesh(d=2)                     # p defaults to ndev // d
+    assert m1.shape["data"] == 2
+    with pytest.raises(ValueError):
+        sort_mesh(1024, d=2)                # more devices than exist
+    with pytest.raises(ValueError):
+        sort_mesh(4, d=0)
+
+
+def test_batched_psort_rejects_bad_args():
+    xs = np.arange(32, dtype=np.int32).reshape(2, 16)
+    with pytest.raises(ValueError):
+        psort(xs, algorithm="rquick", backend="sim")       # p required
+    with pytest.raises(ValueError):
+        psort(xs[None], p=4, algorithm="rquick", backend="sim")  # 3-D keys
+    from jax.sharding import Mesh
+    mesh1d = Mesh(np.array(jax.devices()[:4]), ("sort",))
+    with pytest.raises(ValueError):
+        psort(xs, mesh=mesh1d, algorithm="rquick")         # no data axis
+    mesh_wrong_d = sort_mesh(2, d=4)
+    with pytest.raises(ValueError):
+        psort(xs, mesh=mesh_wrong_d, algorithm="rquick")   # d mismatch

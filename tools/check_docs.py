@@ -1,0 +1,115 @@
+"""Docs-freshness gate (CI `docs` job).
+
+Two checks, both offline and deterministic:
+
+1. **EXPERIMENTS.md freshness** — regenerates the file via
+   ``benchmarks/calibrate.py --experiments-only`` into a temp path and
+   diffs it against the committed copy.  The regime tables and the
+   subgroup-sort grid are pure functions of the cost model and the
+   counted collective traces, so any drift means someone edited the file
+   by hand or changed the generators without regenerating.
+
+2. **Markdown link integrity** — every relative link target in the
+   tracked docs (README.md, ROADMAP.md, EXPERIMENTS.md, docs/*.md) must
+   exist on disk.  External (http/https/mailto) links and pure anchors
+   are skipped.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import difflib
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "ROADMAP.md", "EXPERIMENTS.md"]
+
+# [text](target) — excludes images' leading ! only in that we don't care;
+# image targets must exist too.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+_PROFILE = re.compile(r"Machine profile: \*\*([^*]+)\*\*")
+
+
+def _committed_profile_args(text: str) -> list[str]:
+    """Regenerate with the same profile the committed file was built from.
+
+    The generator stamps ``Machine profile: **<name>**`` into the header;
+    when a matching ``profiles/<name>.json`` exists the file came from
+    ``--profile`` and the gate must pass it too, else the default prior
+    profile applies (its name matches no file).
+    """
+    m = _PROFILE.search(text)
+    if m:
+        candidate = REPO / "profiles" / f"{m.group(1).strip()}.json"
+        if candidate.exists():
+            return ["--profile", str(candidate)]
+    return []
+
+
+def check_experiments() -> list[str]:
+    committed = REPO / "EXPERIMENTS.md"
+    if not committed.exists():
+        return ["EXPERIMENTS.md is missing"]
+    with tempfile.NamedTemporaryFile(suffix=".md", delete=False) as f:
+        tmp = f.name
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "calibrate.py"),
+         "--experiments-only", "--experiments", tmp,
+         *_committed_profile_args(committed.read_text())],
+        cwd=REPO, capture_output=True, text=True)
+    if proc.returncode != 0:
+        return [f"calibrate.py --experiments-only failed:\n{proc.stderr}"]
+    fresh = Path(tmp).read_text()
+    stale = committed.read_text()
+    if fresh == stale:
+        return []
+    diff = "".join(difflib.unified_diff(
+        stale.splitlines(keepends=True), fresh.splitlines(keepends=True),
+        fromfile="EXPERIMENTS.md (committed)",
+        tofile="EXPERIMENTS.md (regenerated)", n=2))
+    return ["EXPERIMENTS.md drifted from `calibrate.py --experiments-only` "
+            "output; regenerate it:\n" + diff]
+
+
+def check_links() -> list[str]:
+    errors = []
+    docs = [REPO / f for f in DOC_FILES]
+    docs += sorted((REPO / "docs").glob("*.md")) if (REPO / "docs").exists() \
+        else []
+    for doc in docs:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(REPO)}: file missing")
+            continue
+        for m in _LINK.finditer(doc.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check_experiments() + check_links()
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print("docs OK: EXPERIMENTS.md fresh, all relative links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
