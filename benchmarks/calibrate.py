@@ -33,10 +33,20 @@ vmap over emulated PEs — p = 64…1024):
    data movement, so the launch terms are unidentifiable), which is
    exactly why the profile itself comes from the microbenchmarks.
 
+A third, optional phase (``--nested P_OUTER P_INNER``) runs the
+**two-tier** measurement on a nested (inter × intra) sim mesh: per-axis
+primitive microbenchmarks fit distinct inner/outer α and β into the
+profile (the ``*_inner`` fields of :class:`CostModel`, charged to the
+intra-axis levels of hierarchical RAMS by ``cost_rams(mesh_shape=...)``),
+and a nested-vs-flat RAMS sweep adds ``rams@PoxPi`` wall-clock cells next
+to the flat oracle so ``tools/check_bench.py`` gates the hierarchical
+path too.
+
 Typical runs::
 
     PYTHONPATH=src python benchmarks/calibrate.py --p 64 256 1024
     PYTHONPATH=src python benchmarks/calibrate.py --p 64 --fast
+    PYTHONPATH=src python benchmarks/calibrate.py --p 64 256 --nested 8 8
     PYTHONPATH=src python benchmarks/calibrate.py --experiments-only
 
 The p = 1024 column compiles ~20 programs of 1024 emulated PEs; expect
@@ -91,8 +101,13 @@ def eligible(algo: str, e: int, p: int) -> bool:
     return True
 
 
-def cell_features(n: int, p: int, algo: str) -> dict:
-    tr = trace_collectives(n, p, algo)
+def cell_features(n: int, p: int, algo: str, mesh_shape=None,
+                  **algo_kw) -> dict:
+    """Counted-trace feature vector of the cell *as timed* — extra
+    ``algo_kw`` (e.g. an explicit ``level_bits``) must match the psort
+    call so the NNLS fit regresses wall-clock against the schedule that
+    actually ran."""
+    tr = trace_collectives(n, p, algo, mesh_shape=mesh_shape, **algo_kw)
     npp = n / p
     return {
         "p2p": tr.p2p_launches,
@@ -161,6 +176,117 @@ def bench_local_sort_rate(p: int, m: int = 1 << 14) -> float:
                     .astype(np.int32))
     t = _median_seconds(f, x)
     return m * math.log2(m) / t
+
+
+# ---------------------------------------------------------------------------
+# Two-tier (nested-axis) microbenchmarks: distinct inner/outer α, β
+# ---------------------------------------------------------------------------
+
+
+def bench_axis_ppermute(p_o: int, p_i: int, axis: str, w: int,
+                        chain: int = 16) -> float:
+    """Seconds per ppermute launch on ONE real axis of a nested
+    (inter, intra) sim mesh — the per-axis analogue of
+    :func:`bench_ppermute` (calls naming a real axis pass through the
+    nested view unchanged)."""
+    axes = (("inter", p_o), ("intra", p_i))
+    size = p_o if axis == "inter" else p_i
+    perm = [(i, (i + 1) % size) for i in range(size)]
+
+    def body(v):
+        for _ in range(chain):
+            v = comm.ppermute(v, axis, perm) + 1  # +1 defeats CSE
+        return v
+
+    f = jax.jit(comm.sim_map(body, "sort", nested=axes))
+    x = jnp.zeros((p_o, p_i, w), jnp.int32)
+    return _median_seconds(f, x) / chain
+
+
+def bench_axis_all_gather(p_o: int, p_i: int, axis: str, w: int,
+                          chain: int = 8) -> float:
+    """Seconds per fused-collective launch (tiny all_gather) on one real
+    axis of a nested mesh."""
+    axes = (("inter", p_o), ("intra", p_i))
+    size = p_o if axis == "inter" else p_i
+
+    def body(v):
+        acc = v
+        for _ in range(chain):
+            g = comm.all_gather(acc, axis, tiled=True)    # (size*w,)
+            acc = g.reshape(size, w)[0] + 1               # (w,), chained
+        return acc
+
+    f = jax.jit(comm.sim_map(body, "sort", nested=axes))
+    x = jnp.zeros((p_o, p_i, w), jnp.int32)
+    return _median_seconds(f, x) / chain
+
+
+def measure_nested_profile(model: CostModel, p_o: int, p_i: int) -> CostModel:
+    """Fit the *inner-axis* machine constants from per-axis primitives on
+    a (p_o × p_i) nested sim mesh and attach them to ``model``.
+
+    On the single-host sim backend both axes run at memory speed, so the
+    inner/outer split mostly demonstrates the machinery; on a real
+    inter-host × intra-host slice the same sweep separates NIC-bound from
+    ICI-bound constants (the two-tier measurement of arXiv 1410.6754)."""
+    import dataclasses as _dc
+    w_lo, w_hi = 64, 4096
+    prior = selection.DEFAULT_MODEL
+    a_i = bench_axis_ppermute(p_o, p_i, "intra", 1)
+    t_lo = bench_axis_ppermute(p_o, p_i, "intra", w_lo)
+    t_hi = bench_axis_ppermute(p_o, p_i, "intra", w_hi)
+    b_i = max((t_hi - t_lo) / (w_hi - w_lo), 1e-3 * prior.beta)
+    ac_i = max(bench_axis_all_gather(p_o, p_i, "intra", 1),
+               1e-3 * prior.alpha_c)
+    a_o = bench_axis_ppermute(p_o, p_i, "inter", 1)
+    ac_o = bench_axis_all_gather(p_o, p_i, "inter", 1)
+    meta = dict(model.meta)
+    meta["nested_microbench"] = {
+        "mesh_shape": [p_o, p_i],
+        "intra": {"alpha": a_i, "alpha_c": ac_i, "beta": b_i},
+        "inter": {"alpha": a_o, "alpha_c": ac_o},
+        "method": "per-axis primitives on the nested sim mesh "
+                  "(two-tier 1410.6754-style)",
+    }
+    return _dc.replace(model, alpha_inner=float(a_i),
+                       alpha_c_inner=float(ac_i), beta_inner=float(b_i),
+                       meta=meta)
+
+
+def run_nested_sweep(p_o: int, p_i: int, iters: int, exps=(0, 2, 4)):
+    """Nested-vs-flat RAMS wall-clock cells at the same total p.
+
+    Cells land in the bench JSON under algorithm ``rams@{p_o}x{p_i}``
+    (nested) next to ``rams-flat@{p_o}x{p_i}`` (the flat-axis oracle run
+    with the *same* aligned level schedule), so ``tools/check_bench.py``
+    gates the hierarchical path's trajectory too.  Both labels carry the
+    mesh shape: the plain ``rams`` cells of :func:`run_sweep` time the
+    default schedule and must not be overwritten, and the ``@`` marker
+    keeps all of these out of the crossover winner tables."""
+    from repro.core.rams import nested_level_bits
+    p = p_o * p_i
+    bits = tuple(nested_level_bits(p_o, p_i))
+    cells = []
+    for e in exps:
+        n = max(1, int(p * 2.0 ** e))
+        x = generate_instance("Uniform", p, n, seed=11).astype(np.int32)
+        for label, kw, feat_kw in (
+                (f"rams@{p_o}x{p_i}", {"mesh_shape": (p_o, p_i)},
+                 {"mesh_shape": (p_o, p_i)}),
+                (f"rams-flat@{p_o}x{p_i}", {"p": p, "level_bits": bits},
+                 {"level_bits": bits})):
+            us = timeit(lambda: np.asarray(
+                psort(x, algorithm="rams", backend="sim", **kw)),
+                warmup=1, iters=iters)
+            feat = cell_features(n, p, "rams", **feat_kw)
+            cell = {"p": p, "e": e, "n": n, "algorithm": label,
+                    "us": us, "seconds": us * 1e-6, **feat}
+            cells.append(cell)
+            emit(f"calibrate/nested{p_o}x{p_i}/npp2^{e}/{label}", us,
+                 f"p2p={feat['p2p']} fused={feat['fused']} "
+                 f"wire={feat['wire_bytes']}B")
+    return cells
 
 
 def measure_profile(ps, name: str) -> CostModel:
@@ -258,7 +384,7 @@ def _winner_sequence(rows):
 def measured_crossovers(cells, p: int):
     by_e = {}
     for c in cells:
-        if c["p"] != p:
+        if c["p"] != p or "@" in c["algorithm"]:   # skip nested-mesh cells
             continue
         by_e.setdefault(c["e"], []).append((c["seconds"], c["algorithm"]))
     rows = [(e, min(v)[1]) for e, v in sorted(by_e.items())]
@@ -298,6 +424,31 @@ def run_sweep(ps, exps_override, iters: int):
 
 SUBGROUP_PS = (4, 16, 64)
 SUBGROUP_DS = (1, 2, 4)
+
+NESTED_GRID = ((2, 8), (4, 16), (16, 64))
+
+
+def nested_rows(npp: int = 16):
+    """The "Hierarchical mesh" grid: per-PE counted traces of nested RAMS
+    over (p_outer × p_inner) sim meshes, split by real axis.
+
+    Deterministic (trace-time counts, no wall-clock), so
+    ``tools/check_docs.py`` can diff the regenerated file.  The point of
+    the grid: the slow *inter* axis carries the shuffle plus exactly one
+    level's all_to_all — every later level is intra-only, so inter-axis
+    volume stays flat as levels deepen."""
+    rows = []
+    for p_o, p_i in NESTED_GRID:
+        p = p_o * p_i
+        n = npp * p
+        tr = trace_collectives(n, mesh_shape=(p_o, p_i), algorithm="rams")
+        ax = tr.by_axis()
+        inter_a2a = tr.filter(primitive="all_to_all", axis="inter")
+        rows.append((p_o, p_i, n, len(tr.tags()) - 1,
+                     ax["inter"]["launches"], ax["inter"]["wire_bytes"],
+                     ax["intra"]["launches"], ax["intra"]["wire_bytes"],
+                     " ".join(inter_a2a.tags())))
+    return rows
 
 
 def subgroup_rows(model: CostModel, npp: int = 32):
@@ -381,6 +532,30 @@ def write_experiments(path: str, model: CostModel):
 
     lines += [
         "",
+        "## Hierarchical mesh (p_outer × p_inner)",
+        "",
+        "Nested-axis RAMS (`psort(mesh_shape=(p_outer, p_inner))`) maps the",
+        "level schedule onto a hierarchical (inter × intra) mesh: the first",
+        "level splits the data across the slow *inter* axis, every later",
+        "level recurses inside an *intra* subcube",
+        "(`repro.core.comm.NestedCollectives` decomposes the virtual-axis",
+        "collectives; `repro.core.rams.nested_level_bits` aligns the",
+        "schedule).  Cells are per-PE counted traces",
+        "(`trace_collectives(n, mesh_shape=..., algorithm=\"rams\")`, n/p =",
+        "16) split by real axis — the inter column carries only the initial",
+        "shuffle plus **one** level's all_to_all, independent of depth,",
+        "while the run stays bitwise-identical to the flat path.",
+        "",
+        "| p_outer | p_inner | n | levels | inter launches | inter bytes/PE "
+        "| intra launches | intra bytes/PE | inter a2a phases |",
+        "|---:|---:|---:|---:|---:|---:|---:|---:|---|",
+    ]
+    for p_o, p_i, n, lvls, il, ib, al, ab, tags in nested_rows():
+        lines.append(f"| {p_o} | {p_i} | {n} | {lvls} | {il} | {ib} "
+                     f"| {al} | {ab} | {tags} |")
+
+    lines += [
+        "",
         "## `profiles/*.json` schema",
         "",
         "A profile is one serialized `repro.core.selection.CostModel`",
@@ -400,6 +575,12 @@ def write_experiments(path: str, model: CostModel):
         "throughput |",
         "| `slot_overhead` | float | static slot provisioning factor of "
         "the a2a exchanges |",
+        "| `alpha_inner` | float s / null | intra-axis p2p step of a "
+        "nested mesh (null = same as `alpha`) |",
+        "| `alpha_c_inner` | float s / null | intra-axis fused-collective "
+        "launch; intra levels pay no `alpha_hop` fill |",
+        "| `beta_inner` | float s/word / null | intra-axis per-word cost "
+        "(`--nested` two-tier fit) |",
         "| `meta` | object | free-form provenance — `microbench` (the "
         "primitive measurements the constants came from), `sweep_fit` "
         "(whole-program NNLS diagnostic: `r2`, `theta`, `features`, "
@@ -426,6 +607,12 @@ def main(argv=None):
                     help=f"thin grid {EXPS_FAST} (smoke runs)")
     ap.add_argument("--iters", type=int, default=2,
                     help="timed iterations per cell (after 1 warmup)")
+    ap.add_argument("--nested", type=int, nargs=2, default=None,
+                    metavar=("P_OUTER", "P_INNER"),
+                    help="two-tier pass on a nested (inter × intra) sim "
+                         "mesh: per-axis microbench fits distinct "
+                         "inner/outer α, β into the profile, and a "
+                         "nested-vs-flat RAMS sweep adds rams@PoxPi cells")
     ap.add_argument("--machine", default=None,
                     help="profile name (default <os>-<arch>-sim)")
     ap.add_argument("--profile-dir", default="profiles")
@@ -454,8 +641,18 @@ def main(argv=None):
     print(f"# microbenched profile: α={model.alpha:.3g}  "
           f"α_c={model.alpha_c:.3g}  α_hop={model.alpha_hop:.3g}  "
           f"β={model.beta:.3g}  local_rate={model.local_rate:.3g}")
+    if args.nested:
+        p_o, p_i = args.nested
+        model = measure_nested_profile(model, p_o, p_i)
+        print(f"# two-tier ({p_o}x{p_i}): α_in={model.alpha_inner:.3g}  "
+              f"α_c_in={model.alpha_c_inner:.3g}  "
+              f"β_in={model.beta_inner:.3g}")
 
     cells = run_sweep(args.p, exps_override, args.iters)
+    if args.nested:
+        cells += run_nested_sweep(p_o, p_i, args.iters,
+                                  exps=tuple(EXPS_FAST) if args.fast
+                                  else (0, 2, 4))
     # whole-program regression over the sweep — diagnostic only (see
     # module docstring); kept in meta so the two views can be compared
     sweep_fit = fit_profile(cells, machine)
@@ -498,7 +695,10 @@ def main(argv=None):
             "profile": {"path": profile_path,
                         "alpha": model.alpha, "alpha_c": model.alpha_c,
                         "alpha_hop": model.alpha_hop, "beta": model.beta,
-                        "local_rate": model.local_rate},
+                        "local_rate": model.local_rate,
+                        "alpha_inner": model.alpha_inner,
+                        "alpha_c_inner": model.alpha_c_inner,
+                        "beta_inner": model.beta_inner},
             "sweep_fit": model.meta["sweep_fit"],
             "crossovers": crossings,
             "bench": bench,

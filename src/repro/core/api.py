@@ -171,9 +171,52 @@ def _psort2_sim_jit(keys3d, counts, axis_name, data_axis, d, p, algorithm,
                         data_axis=data_axis)(keys3d, counts)
 
 
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis",
+                                   "axes", "p", "capacity", "out_capacity",
+                                   "mesh", "algo_kw", "pallas"))
+def _psort_nested_jit(keys_nd, counts, mesh, axis_name, data_axis, axes, p,
+                      algorithm, capacity, out_capacity, algo_kw, pallas):
+    """psort over the virtual flat axis of a nested (inter, intra) mesh.
+
+    The body is the *same* per-PE body as the flat path; its collectives
+    name ``axis_name`` and the :func:`repro.core.comm.nested` scope
+    decomposes them onto the real mesh axes while tracing.  ``data_axis``
+    (when not None) leads for batched keys.
+    """
+    body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
+    names = ((data_axis,) if data_axis else ()) + tuple(n for n, _ in axes)
+    nlead = len(names)
+
+    def blk(keys_blk, count_blk):
+        with comm.nested(axis_name, axes):
+            k, i, c, o = body(keys_blk.reshape(keys_blk.shape[nlead:]),
+                              count_blk.reshape(()))
+        dims = tuple(range(nlead))
+        return tuple(jnp.expand_dims(v, dims) for v in (k, i, c, o))
+
+    out = shard_map(blk, mesh=mesh,
+                    in_specs=(P(*names), P(*names)),
+                    out_specs=(P(*names),) * 4)(keys_nd, counts)
+    return out
+
+
+@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis", "d",
+                                   "axes", "p", "capacity", "out_capacity",
+                                   "algo_kw", "pallas"))
+def _psort_nested_sim_jit(keys_nd, counts, axis_name, data_axis, d, axes, p,
+                          algorithm, capacity, out_capacity, algo_kw, pallas):
+    body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
+    return comm.sim_map(body, axis_name, p, nested=axes,
+                        mesh=(d, p) if data_axis else None,
+                        data_axis=data_axis)(keys_nd, counts)
+
+
 def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
           mesh: Optional[Mesh] = None, axis: str = "sort",
           data_axis: str = "data",
+          mesh_shape: Optional[tuple] = None,
+          mesh_axes: tuple = ("inter", "intra"),
+          levels: Optional[int] = None,
           capacity_factor: float = 2.0, return_info: bool = False,
           backend: str = "shard_map",
           cost_model: Optional[selection.CostModel] = None, **algo_kw):
@@ -191,6 +234,24 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     keys (default: ``repro.dist.sharding.sort_mesh``).  ``backend="sim"``
     runs meshless and needs an explicit ``p``; the data-axis extent is
     read off ``keys.shape[0]``.
+
+    **Hierarchical meshes** — ``mesh_shape=(p_outer, p_inner)`` sorts over
+    the *nested* axis pair ``mesh_axes`` (default ``("inter", "intra")``)
+    of a hierarchical mesh instead of one flat axis: the algorithms still
+    see a single virtual axis of size ``p_outer·p_inner``, but every
+    collective is decomposed onto the real axes
+    (``repro.core.comm.NestedCollectives``), and RAMS aligns its level
+    schedule to the axis boundary (``repro.core.rams.nested_level_bits``)
+    so the first level's all_to_all is the **only** exchange crossing the
+    slow outer axis — every later level recurses inside an intra subcube.
+    Bitwise-identical to the flat run of the same schedule.  On
+    ``backend="shard_map"`` the mesh is ``sort_mesh(shape=mesh_shape)``;
+    on ``backend="sim"`` the hierarchy is emulated (``p`` may be omitted).
+
+    ``levels`` (multi-level AMS family only) picks the number of RAMS
+    levels: flat it forwards to ``rams(levels=...)``; nested, the first
+    level is pinned to the outer axis and ``levels - 1`` levels split the
+    inner axis.  ``levels=1`` is the single-exchange samplesort structure.
 
     ``cost_model`` parameterizes ``algorithm="auto"``: a
     :class:`repro.core.selection.CostModel` machine profile (e.g. loaded
@@ -210,16 +271,49 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     >>> np.asarray(psort(xs, p=4, algorithm="rquick", backend="sim"))
     array([[ 1,  2,  3,  4,  5,  6,  8,  9],
            [10, 20, 30, 40, 50, 60, 80, 90]], dtype=int32)
+
+    A hierarchical (2 × 2) mesh — same result, collectives split across
+    the inter/intra axes:
+
+    >>> np.asarray(psort(x, mesh_shape=(2, 2), algorithm="rams",
+    ...                  backend="sim"))
+    array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if levels is not None and algorithm not in ("auto", "rams", "ntb-ams"):
+        raise ValueError(f"levels= applies to the multi-level AMS family "
+                         f"(or 'auto'), not algorithm={algorithm!r}")
     keys = jnp.asarray(keys)
     if keys.ndim not in (1, 2):
         raise ValueError(f"keys must be 1-D (one sort) or 2-D (a batch of "
                          f"independent sorts); got shape {keys.shape}")
     batched = keys.ndim == 2
     d = keys.shape[0] if batched else 1
-    if backend == "shard_map":
+    if mesh_shape is not None:
+        p_o, p_i = (int(v) for v in mesh_shape)
+        if (p_o & (p_o - 1)) or (p_i & (p_i - 1)) or p_o < 1 or p_i < 1:
+            raise ValueError(f"mesh_shape={mesh_shape} entries must be "
+                             f"powers of two (hypercube layout)")
+        if p is not None and p != p_o * p_i:
+            raise ValueError(f"p={p} inconsistent with mesh_shape="
+                             f"{tuple(mesh_shape)}")
+        p = p_o * p_i
+        if backend == "shard_map":
+            if mesh is None:
+                from repro.dist.sharding import sort_mesh
+                mesh = sort_mesh(shape=(p_o, p_i), d=d if batched else 1,
+                                 data_axis=data_axis, mesh_axes=mesh_axes)
+            want = dict(zip(mesh_axes, (p_o, p_i)))
+            if batched:
+                want[data_axis] = d
+            for a, sz in want.items():
+                if mesh.shape.get(a) != sz:
+                    raise ValueError(f"mesh axis {a!r} must have size {sz}; "
+                                     f"mesh has {dict(mesh.shape)}")
+        elif mesh is not None:
+            raise ValueError("backend='sim' runs meshless; drop the mesh arg")
+    elif backend == "shard_map":
         if batched:
             if mesh is None:
                 from repro.dist.sharding import sort_mesh
@@ -249,7 +343,16 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     per = -(-max(n, 1) // p)                       # ceil(n/p)
     capacity = max(4, int(np.ceil(per * capacity_factor)))
     if algorithm == "auto":
-        algorithm = selection.select_algorithm(n, p, model=cost_model)
+        algorithm = selection.select_algorithm(n, p, model=cost_model,
+                                               levels=levels,
+                                               mesh_shape=mesh_shape)
+    if algorithm in ("rams", "ntb-ams"):
+        if mesh_shape is not None:
+            from .rams import nested_level_bits
+            algo_kw.setdefault(
+                "level_bits", tuple(nested_level_bits(p_o, p_i, levels)))
+        elif levels is not None:
+            algo_kw.setdefault("levels", levels)
     out_capacity = _out_capacity(algorithm, n, p, per, capacity)
 
     pad = pad_value(u.dtype)
@@ -260,7 +363,28 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     # trace time, so without this a cached executable would silently
     # ignore a toggle between calls of the same signature.
     pl = use_pallas_local_sort()
-    if batched:
+    if mesh_shape is not None:
+        axes = ((mesh_axes[0], p_o), (mesh_axes[1], p_i))
+        lead = (d,) if batched else ()
+        flat = jnp.full(lead + (p * per,), pad, u.dtype)
+        flat = flat.at[..., :n].set(u)
+        keys_nd = flat.reshape(lead + (p_o, p_i, per))
+        counts_nd = jnp.broadcast_to(row_counts.reshape(p_o, p_i),
+                                     lead + (p_o, p_i))
+        da = data_axis if batched else None
+        if backend == "shard_map":
+            keys_out, idx_out, counts_out, overflow = _psort_nested_jit(
+                keys_nd, counts_nd, mesh, axis, da, axes, p, algorithm,
+                capacity, out_capacity, kw, pallas=pl)
+        else:
+            keys_out, idx_out, counts_out, overflow = _psort_nested_sim_jit(
+                keys_nd, counts_nd, axis, da, d, axes, p, algorithm,
+                capacity, out_capacity, kw, pallas=pl)
+        keys_out = keys_out.reshape((d, p) + keys_out.shape[-1:])
+        idx_out = idx_out.reshape((d, p) + idx_out.shape[-1:])
+        counts_out = counts_out.reshape(d, p)
+        overflow = overflow.reshape(d, p)
+    elif batched:
         flat = jnp.full((d, p * per), pad, u.dtype).at[:, :n].set(u)
         keys3d = flat.reshape(d, p, per)
         counts = jnp.broadcast_to(row_counts, (d, p))
@@ -301,6 +425,8 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
         info = {
             "algorithm": algorithm,
             "backend": backend,
+            "mesh_shape": tuple(mesh_shape) if mesh_shape is not None
+            else None,
             "counts": counts_out if batched else counts_out[0],
             "overflow": int(np.asarray(overflow).sum()),
             "balance": counts_out.max() / max(1.0, n / p),
@@ -318,8 +444,11 @@ def _out_capacity(algorithm: str, n: int, p: int, per: int, capacity: int) -> in
     return capacity
 
 
-def trace_collectives(n: int, p: int, algorithm: str,
+def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
                       capacity_factor: float = 2.0, d: int = 1,
+                      mesh_shape: Optional[tuple] = None,
+                      mesh_axes: tuple = ("inter", "intra"),
+                      levels: Optional[int] = None,
                       **algo_kw) -> comm.CommTrace:
     """Count the collectives one ``psort`` call would launch, per PE.
 
@@ -335,6 +464,13 @@ def trace_collectives(n: int, p: int, algorithm: str,
     independent of the data-axis extent — the subgroup-isolation property
     EXPERIMENTS.md's "Subgroup sort" grid is generated from.
 
+    ``mesh_shape=(p_outer, p_inner)`` traces the **hierarchical** path:
+    the counter sits inside the nested view, so every recorded event
+    carries the real axis it targeted (``mesh_axes``) and the RAMS phase
+    tag — ``trace.by_axis()`` splits inter- from intra-axis volume,
+    ``trace.by_tag()`` attributes it per level.  ``levels`` forwards to
+    the AMS level schedule exactly as in :func:`psort`.
+
     >>> from repro.core.api import trace_collectives
     >>> t1 = trace_collectives(64, 8, "bitonic")
     >>> t1.counts()["ppermute"] >= 6            # d·(d+1)/2 exchange rounds
@@ -342,9 +478,40 @@ def trace_collectives(n: int, p: int, algorithm: str,
     >>> t2 = trace_collectives(64, 8, "bitonic", d=4)
     >>> t2.summary() == t1.summary()            # per-PE trace: no d term
     True
+
+    On a nested mesh, RAMS crosses the slow outer axis with exactly one
+    level's all_to_all (plus the initial shuffle) — every other level is
+    intra-only:
+
+    >>> t = trace_collectives(64 * 32, mesh_shape=(4, 16), algorithm="rams")
+    >>> t.filter(primitive="all_to_all", axis="inter").tags()
+    ['level0', 'shuffle']
+    >>> [tag for tag, s in sorted(t.by_tag().items())
+    ...  if "all_to_all" in s["counts"]]
+    ['level0', 'level1', 'shuffle']
     """
+    axes = None
+    if mesh_shape is not None:
+        p_o, p_i = (int(v) for v in mesh_shape)
+        if p is not None and p != p_o * p_i:
+            raise ValueError(f"p={p} inconsistent with mesh_shape="
+                             f"{tuple(mesh_shape)}")
+        p = p_o * p_i
+        axes = ((mesh_axes[0], p_o), (mesh_axes[1], p_i))
+    if p is None:
+        raise ValueError("trace_collectives needs p or mesh_shape")
     if p & (p - 1):
         raise ValueError(f"p={p} must be a power of two (hypercube layout)")
+    if algorithm == "auto":
+        algorithm = selection.select_algorithm(n, p, levels=levels,
+                                               mesh_shape=mesh_shape)
+    if algorithm in ("rams", "ntb-ams"):
+        if mesh_shape is not None:
+            from .rams import nested_level_bits
+            algo_kw.setdefault(
+                "level_bits", tuple(nested_level_bits(p_o, p_i, levels)))
+        elif levels is not None:
+            algo_kw.setdefault("levels", levels)
     per = -(-max(n, 1) // p)
     capacity = max(4, int(np.ceil(per * capacity_factor)))
     out_capacity = _out_capacity(algorithm, n, p, per, capacity)
@@ -353,8 +520,9 @@ def trace_collectives(n: int, p: int, algorithm: str,
     counter = comm.CountingCollectives(comm.SIM)
     mesh = (d, p) if d > 1 else None
     runner = comm.sim_map(body, "sort", p, impl=counter, mesh=mesh,
-                          data_axis="data" if d > 1 else None)
-    lead = (d, p) if d > 1 else (p,)
+                          data_axis="data" if d > 1 else None, nested=axes)
+    axis_lead = (p_o, p_i) if axes is not None else (p,)
+    lead = ((d,) + axis_lead) if d > 1 else axis_lead
     jax.eval_shape(runner,
                    jax.ShapeDtypeStruct(lead + (per,), jnp.uint32),
                    jax.ShapeDtypeStruct(lead, jnp.int32))

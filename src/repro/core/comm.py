@@ -28,8 +28,18 @@ to the *current* :class:`Collectives` implementation:
   * :class:`CountingCollectives` — a decorator backend: wraps any
     ``Collectives``, forwards every call unchanged, and records a structured
     :class:`CommTrace` (per-primitive launch counts, payload bytes per PE,
-    group sizes).  ``benchmarks/calibrate.py`` fits the machine profile of
-    ``core/selection.py`` from these traces; :func:`counting` scopes one.
+    group sizes, target axis, phase tag).  ``benchmarks/calibrate.py`` fits
+    the machine profile of ``core/selection.py`` from these traces;
+    :func:`counting` scopes one.
+
+  * :class:`NestedCollectives` — a decorator *view*: presents one virtual
+    flat axis over an ``(outer, inner)`` pair of real named axes (a
+    hierarchical inter-host × intra-host mesh) and decomposes every
+    virtual-axis collective element-exactly onto the real axes of the
+    wrapped backend — so the unchanged algorithm bodies run over nested
+    meshes, bitwise-identical to the flat-axis path, on both the Lax and
+    Sim backends (:func:`nested` scopes the shard_map side;
+    ``sim_map(nested=...)`` the simulated side).
 
 Backends are scoped with :func:`use` (a context manager); the scope must be
 active while the algorithm body is *traced*, so backend runners like
@@ -141,6 +151,8 @@ class CommEvent:
     primitive: str                    # ppermute | psum | all_gather | all_to_all
     bytes: int                        # payload bytes moved per PE (input side)
     group_size: Optional[int] = None  # participants; None = the full axis
+    axis: Optional[str] = None        # mesh axis the launch targeted
+    tag: Optional[str] = None         # algorithm phase (see :func:`tagged`)
 
 
 class CommTrace:
@@ -150,14 +162,22 @@ class CommTrace:
     execution, with payload sizes read off the static shapes.  Unrolled
     loops therefore contribute one event per iteration — exactly the launch
     count the α-terms of the cost model charge for.
+
+    Each event carries the mesh axis it targeted and the active phase tag
+    (:func:`tagged` — RAMS labels its shuffle and every level).  Under a
+    :class:`NestedCollectives` view the recorded axes are the *real* mesh
+    axes of the decomposed launches, so :meth:`by_axis` splits inter- from
+    intra-axis volume and :meth:`by_tag` attributes it per level.
     """
 
     def __init__(self):
         self.events: List[CommEvent] = []
 
     def add(self, primitive: str, nbytes: int,
-            group_size: Optional[int] = None):
-        self.events.append(CommEvent(primitive, int(nbytes), group_size))
+            group_size: Optional[int] = None, axis: Optional[str] = None,
+            tag: Optional[str] = None):
+        self.events.append(CommEvent(primitive, int(nbytes), group_size,
+                                     axis, tag))
 
     # -- aggregation ------------------------------------------------------
 
@@ -196,6 +216,42 @@ class CommTrace:
     def wire_bytes(self) -> int:
         return sum(e.bytes for e in self.events)
 
+    # -- axis / phase attribution ----------------------------------------
+
+    def filter(self, primitive: Optional[str] = None,
+               axis: Optional[str] = None,
+               tag: Optional[str] = None) -> "CommTrace":
+        """Sub-trace of the events matching every given criterion
+        (``None`` criteria are ignored; ``axis=""`` / ``tag=""`` select
+        events with the field unset)."""
+        sub = CommTrace()
+        for e in self.events:
+            if primitive is not None and e.primitive != primitive:
+                continue
+            if axis is not None and (e.axis or "") != axis:
+                continue
+            if tag is not None and (e.tag or "") != tag:
+                continue
+            sub.events.append(e)
+        return sub
+
+    def axes(self) -> List[str]:
+        return sorted({e.axis or "" for e in self.events})
+
+    def tags(self) -> List[str]:
+        return sorted({e.tag or "" for e in self.events})
+
+    def by_axis(self) -> Dict[str, dict]:
+        """Per-mesh-axis launch/byte totals — under a nested view this is
+        the inter- vs. intra-axis communication split."""
+        return {a: self.filter(axis=a).summary() for a in self.axes()}
+
+    def by_tag(self) -> Dict[str, dict]:
+        """Per-phase totals (RAMS: ``shuffle``, ``level0``, ``level1``, …).
+        The tags partition the events, so the per-tag summaries sum back to
+        :meth:`summary` — the per-level attribution invariant."""
+        return {t: self.filter(tag=t).summary() for t in self.tags()}
+
     def summary(self, p: Optional[int] = None) -> dict:
         s = {
             "launches": self.launches,
@@ -210,13 +266,41 @@ class CommTrace:
         return s
 
 
+# Phase tag recorded onto CommEvents (e.g. "shuffle", "level0").  A
+# ContextVar for the same reason as the backend scope: tags are read at
+# trace time and must be per-thread.
+_TAG: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "repro_comm_tag", default=None)
+
+
+@contextlib.contextmanager
+def tagged(tag: Optional[str]):
+    """Label every collective traced in this scope with an algorithm-phase
+    tag (recorded by :class:`CountingCollectives`; a no-op otherwise).
+    RAMS tags its initial shuffle and each level, which is what lets a
+    counted trace attribute launches/bytes per level."""
+    token = _TAG.set(tag)
+    try:
+        yield
+    finally:
+        _TAG.reset(token)
+
+
+def current_tag() -> Optional[str]:
+    return _TAG.get()
+
+
 class CountingCollectives(Collectives):
     """Decorator backend: forward to ``inner``, record a :class:`CommTrace`.
 
     Wraps *any* backend (sim or shard_map), so the same counted trace is
     available whichever way the body executes.  Records the collective as
     issued at the call site — e.g. one grouped all_gather is one fused
-    launch regardless of how :class:`SimCollectives` emulates it.
+    launch regardless of how :class:`SimCollectives` emulates it.  Each
+    event carries the axis name the launch targeted and the active
+    :func:`tagged` phase; under a :class:`NestedCollectives` view, place
+    the counter *inside* the view (``NestedCollectives(inner=counter)``)
+    to record the decomposed per-real-axis launches.
     """
 
     def __init__(self, inner: Collectives, trace: Optional[CommTrace] = None):
@@ -234,18 +318,21 @@ class CountingCollectives(Collectives):
         return self.inner.axis_index(axis_name)       # not a communication
 
     def ppermute(self, x, axis_name, perm):
-        self.trace.add("ppermute", _payload_bytes(x))
+        self.trace.add("ppermute", _payload_bytes(x), axis=axis_name,
+                       tag=_TAG.get())
         return self.inner.ppermute(x, axis_name, perm)
 
     def psum(self, x, axis_name, axis_index_groups=None):
         self.trace.add("psum", _payload_bytes(x),
-                       self._gsize(axis_index_groups))
+                       self._gsize(axis_index_groups), axis=axis_name,
+                       tag=_TAG.get())
         return self.inner.psum(x, axis_name,
                                axis_index_groups=axis_index_groups)
 
     def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
         self.trace.add("all_gather", _payload_bytes(x),
-                       self._gsize(axis_index_groups))
+                       self._gsize(axis_index_groups), axis=axis_name,
+                       tag=_TAG.get())
         return self.inner.all_gather(x, axis_name,
                                      axis_index_groups=axis_index_groups,
                                      tiled=tiled)
@@ -253,7 +340,8 @@ class CountingCollectives(Collectives):
     def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
                    axis_index_groups=None, tiled=False):
         self.trace.add("all_to_all", _payload_bytes(x),
-                       self._gsize(axis_index_groups))
+                       self._gsize(axis_index_groups), axis=axis_name,
+                       tag=_TAG.get())
         return self.inner.all_to_all(x, axis_name, split_axis=split_axis,
                                      concat_axis=concat_axis,
                                      axis_index_groups=axis_index_groups,
@@ -470,6 +558,226 @@ class SimCollectives(Collectives):
         return jax.tree.map(one, x)
 
 
+# ---------------------------------------------------------------------------
+# Nested-axis view: one virtual flat axis over an (outer, inner) axis pair
+# ---------------------------------------------------------------------------
+
+
+class NestedCollectives(Collectives):
+    """View an ``(outer, inner)`` pair of named mesh axes as one flat axis.
+
+    The sorting algorithms are written against a single named axis of size
+    ``p`` (the PR-3 topology contract).  On a hierarchical mesh — e.g.
+    inter-host × intra-host, the structure the multi-level scheme of
+    arXiv 1410.6754 maps AMS levels onto — the ``p`` participants are laid
+    out over *two* named axes ``axes = ((outer, p_o), (inner, p_i))`` with
+    flat index ``outer·p_i + inner``.  This view accepts the algorithms'
+    collectives on the **virtual** flat axis and decomposes each into
+    collectives over the real axes of the wrapped backend:
+
+      * calls naming a real axis pass through unchanged;
+      * ``axis_index(virtual)`` composes the per-axis indices;
+      * ``ppermute`` permutations must factor through one axis (XOR
+        hypercube perms always do: bit ``j`` permutes the inner axis when
+        ``j < log2 p_i``, else the outer axis);
+      * grouped collectives classify their ``axis_index_groups``: groups
+        lying inside one inner slice (with the same pattern in every
+        slice, e.g. subcubes of size ≤ p_i) retarget onto the inner axis
+        only; groups that are unions of whole outer slices (subcubes of
+        size ≥ p_i) decompose into an inner-axis stage plus an outer-axis
+        stage.  A full-axis ``all_to_all`` becomes one all_to_all over the
+        slow outer axis and one over the inner axis.
+
+    Every decomposition is **element-exact** (same values in the same
+    places, not just the same multiset), which is what makes nested runs
+    bitwise-identical to the flat ``axis_index_groups`` path.  The wrapped
+    backend may be :data:`LAX` (shard_map over a real multi-axis mesh),
+    :data:`SIM` (nested vmaps, see :func:`sim_map`'s ``nested=`` mode), or
+    a :class:`CountingCollectives` over either — in which case the trace
+    records the decomposed launches with their real axis names, splitting
+    inter- from intra-axis volume.
+    """
+
+    def __init__(self, inner: Collectives, virtual_axis: str,
+                 axes: Sequence):
+        axes = tuple((str(n), int(s)) for n, s in axes)
+        if len(axes) != 2:
+            raise NotImplementedError(
+                f"NestedCollectives supports exactly 2 nested axes; "
+                f"got {axes}")
+        self.inner = inner
+        self.virtual_axis = virtual_axis
+        self.axes = axes
+        (self._oa, self._po), (self._ia, self._pi) = axes
+        self.p = self._po * self._pi
+        self.name = f"nested({inner.name})"
+
+    # -- classification helpers ------------------------------------------
+
+    def _factor_perm(self, perm):
+        """Express a flat-axis permutation as a single real-axis ppermute."""
+        po, pi = self._po, self._pi
+        pairs = [(int(s), int(d)) for s, d in perm]
+        srcs = sorted(s for s, _ in pairs)
+        dsts = sorted(d for _, d in pairs)
+        if srcs == dsts == list(range(self.p)):
+            if all(s // pi == d // pi for s, d in pairs):
+                maps = [{} for _ in range(po)]
+                for s, d in pairs:
+                    maps[s // pi][s % pi] = d % pi
+                if all(m == maps[0] for m in maps):
+                    return self._ia, sorted(maps[0].items())
+            if all(s % pi == d % pi for s, d in pairs):
+                maps = [{} for _ in range(pi)]
+                for s, d in pairs:
+                    maps[s % pi][s // pi] = d // pi
+                if all(m == maps[0] for m in maps):
+                    return self._oa, sorted(maps[0].items())
+        raise NotImplementedError(
+            f"virtual-axis ppermute does not factor through one of the "
+            f"nested axes {self.axes}: {perm}")
+
+    def _classify_groups(self, axis_index_groups):
+        """(mode, groups) with mode 'inner' (retarget onto the inner axis)
+        or 'outer' (decompose: full inner stage + grouped outer stage).
+        ``groups`` are along the real axis; ``None`` = the full axis."""
+        po, pi = self._po, self._pi
+        if axis_index_groups is None:
+            return "outer", None
+        groups = [list(map(int, g)) for g in axis_index_groups]
+        if _is_full_identity_group(groups) and len(groups[0]) == self.p:
+            return "outer", None
+        gsize = len(groups[0])
+        # groups inside one inner slice, same pattern in every slice
+        if gsize <= pi and all(pe // pi == g[0] // pi
+                               for g in groups for pe in g):
+            per_slice = [[] for _ in range(po)]
+            for g in groups:
+                per_slice[g[0] // pi].append(tuple(pe % pi for pe in g))
+            pattern = sorted(per_slice[0])
+            if all(sorted(s) == pattern for s in per_slice):
+                inner_groups = [list(g) for g in pattern]
+                if _is_full_identity_group(inner_groups) and \
+                        len(inner_groups[0]) == pi:
+                    return "inner", None
+                return "inner", inner_groups
+        # groups that are unions of whole outer slices, flat-ascending
+        if gsize % pi == 0:
+            outer_groups = []
+            for g in groups:
+                outs = sorted({pe // pi for pe in g})
+                if g != [o * pi + i for o in outs for i in range(pi)]:
+                    break
+                outer_groups.append(outs)
+            else:
+                if len(outer_groups) == 1 and \
+                        outer_groups[0] == list(range(po)):
+                    return "outer", None
+                return "outer", outer_groups
+        raise NotImplementedError(
+            f"axis_index_groups do not align with the nested axes "
+            f"{self.axes}: {axis_index_groups}")
+
+    # -- the Collectives interface ---------------------------------------
+
+    def axis_index(self, axis_name):
+        if axis_name != self.virtual_axis:
+            return self.inner.axis_index(axis_name)
+        o = self.inner.axis_index(self._oa)
+        i = self.inner.axis_index(self._ia)
+        return (o * self._pi + i).astype(jnp.int32)
+
+    def ppermute(self, x, axis_name, perm):
+        if axis_name != self.virtual_axis:
+            return self.inner.ppermute(x, axis_name, perm)
+        ax, real_perm = self._factor_perm(perm)
+        return self.inner.ppermute(x, ax, real_perm)
+
+    def psum(self, x, axis_name, axis_index_groups=None):
+        if axis_name != self.virtual_axis:
+            return self.inner.psum(x, axis_name,
+                                   axis_index_groups=axis_index_groups)
+        mode, g = self._classify_groups(axis_index_groups)
+        if mode == "inner":
+            return self.inner.psum(x, self._ia, axis_index_groups=g)
+        s = self.inner.psum(x, self._ia)
+        return self.inner.psum(s, self._oa, axis_index_groups=g)
+
+    def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
+        if axis_name != self.virtual_axis:
+            return self.inner.all_gather(x, axis_name,
+                                         axis_index_groups=axis_index_groups,
+                                         tiled=tiled)
+        mode, g = self._classify_groups(axis_index_groups)
+        if mode == "inner":
+            return self.inner.all_gather(x, self._ia, axis_index_groups=g,
+                                         tiled=tiled)
+        gi = self.inner.all_gather(x, self._ia)              # (p_i,) + shape
+        go = self.inner.all_gather(gi, self._oa,
+                                   axis_index_groups=g)  # (g_o, p_i) + shape
+
+        def flatten(v):
+            v = v.reshape((-1,) + v.shape[2:])               # group order
+            if tiled:
+                v = v.reshape((-1,) + v.shape[2:])
+            return v
+
+        return jax.tree.map(flatten, go)
+
+    def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
+                   axis_index_groups=None, tiled=False):
+        if axis_name != self.virtual_axis:
+            return self.inner.all_to_all(x, axis_name, split_axis=split_axis,
+                                         concat_axis=concat_axis,
+                                         axis_index_groups=axis_index_groups,
+                                         tiled=tiled)
+        mode, g = self._classify_groups(axis_index_groups)
+        if mode == "inner":
+            return self.inner.all_to_all(x, self._ia, split_axis=split_axis,
+                                         concat_axis=concat_axis,
+                                         axis_index_groups=g, tiled=tiled)
+        if split_axis != 0 or concat_axis != 0 or not tiled:
+            raise NotImplementedError(
+                "nested virtual all_to_all supports tiled split/concat axis 0")
+        pi = self._pi
+        g_out = self._po if g is None else len(g[0])
+        gsize = g_out * pi
+
+        def one(v):
+            assert v.shape[0] % gsize == 0, (v.shape, gsize)
+            blk = v.shape[0] // gsize
+            # stage 1 — slow axis: chunk jo of the input (p_i·blk rows) is
+            # the blocks destined to outer slice jo; after the exchange,
+            # y[jo] holds member (jo, my_inner)'s blocks for my slice.
+            y = self.inner.all_to_all(v, self._oa, split_axis=0,
+                                      concat_axis=0, axis_index_groups=g,
+                                      tiled=True)
+            y3 = y.reshape((g_out, pi, blk) + v.shape[1:])
+            # stage 2 — inner axis: deliver within the slice.  Transposed
+            # so the inner a2a splits on axis 0 (both backends support it).
+            yt = jnp.moveaxis(y3, 1, 0).reshape((pi * g_out * blk,)
+                                                + v.shape[1:])
+            z = self.inner.all_to_all(yt, self._ia, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            z3 = z.reshape((pi, g_out, blk) + v.shape[1:])
+            return jnp.moveaxis(z3, 1, 0).reshape((gsize * blk,)
+                                                  + v.shape[1:])
+
+        return jax.tree.map(one, x)
+
+
+@contextlib.contextmanager
+def nested(virtual_axis: str, axes, inner: Optional[Collectives] = None):
+    """Scope a :class:`NestedCollectives` view over ``inner`` (default: the
+    current backend) — the shard_map-side entry point: wrap the *tracing*
+    of a body whose collectives name ``virtual_axis`` while the mesh
+    carries the real ``axes``.  A surrounding :func:`counting` scope keeps
+    counting, now with per-real-axis attribution."""
+    base = inner if inner is not None else current()
+    with use(NestedCollectives(base, virtual_axis, axes)):
+        yield
+
+
 LAX = LaxCollectives()
 SIM = SimCollectives()
 
@@ -530,7 +838,8 @@ def all_to_all(x, axis_name, split_axis=0, concat_axis=0,
 def sim_map(body, axis_name: str, p: Optional[int] = None,
             impl: Optional[Collectives] = None,
             mesh: Optional[Sequence[int]] = None,
-            data_axis: Optional[str] = None):
+            data_axis: Optional[str] = None,
+            nested: Optional[Sequence] = None):
     """Run a per-PE SPMD ``body`` over a leading PE axis in one process.
 
     ``body`` is the same function one would pass to ``shard_map`` minus the
@@ -573,6 +882,23 @@ def sim_map(body, axis_name: str, p: Optional[int] = None,
     >>> run(x)
     Array([[0, 1, 2, 3],
            [4, 5, 6, 7]], dtype=int32)
+
+    **Nested-axis mode** — ``nested=(("inter", p_o), ("intra", p_i))``
+    emulates a hierarchical mesh: arguments carry one leading axis per
+    nested axis (outer first), the body runs once per (outer, inner)
+    coordinate under nested ``vmap(axis_name=...)`` transforms, and the
+    body's collectives on the *virtual* flat ``axis_name`` are decomposed
+    onto the real axes by a :class:`NestedCollectives` view (``impl``, when
+    given, becomes the view's wrapped backend).  Bit-identical to the flat
+    ``sim_map(body, axis_name, p_o·p_i)`` run of the same body:
+
+    >>> def body2(v):                      # v: this PE's () block
+    ...     lo = comm.all_gather(v, "sort", tiled=True)   # all p_o*p_i
+    ...     return jnp.sort(lo)[comm.axis_index("sort")]
+    >>> y = jnp.array([[3, 1], [0, 2]], jnp.int32)        # (p_o, p_i)
+    >>> comm.sim_map(body2, "sort", nested=(("inter", 2), ("intra", 2)))(y)
+    Array([[0, 1],
+           [2, 3]], dtype=int32)
     """
 
     def _resolve(cur: Collectives) -> Collectives:
@@ -581,6 +907,15 @@ def sim_map(body, axis_name: str, p: Optional[int] = None,
         if isinstance(cur, CountingCollectives):
             return CountingCollectives(_resolve(cur.inner), cur.trace)
         return SIM
+
+    if nested is not None:
+        nested = tuple((str(n), int(s)) for n, s in nested)
+        p_nested = 1
+        for _, s in nested:
+            p_nested *= s
+        if p is not None and p != p_nested:
+            raise ValueError(f"p={p} inconsistent with nested={nested}")
+        p = p_nested
 
     if mesh is not None:
         d_sz, p_sz = (int(v) for v in mesh)
@@ -591,13 +926,22 @@ def sim_map(body, axis_name: str, p: Optional[int] = None,
         d_sz = None
 
     def run(*args):
-        lead = (d_sz, p) if d_sz is not None else (p,)
+        axis_lead = tuple(s for _, s in nested) if nested is not None \
+            else (p,)
+        lead = ((d_sz,) + axis_lead) if d_sz is not None else axis_lead
         if p is not None:
             for a in jax.tree.leaves(args):
                 assert a.shape[:len(lead)] == lead, (a.shape, lead)
         backend = impl if impl is not None else _resolve(current())
+        if nested is not None:
+            backend = NestedCollectives(backend, axis_name, nested)
         with use(backend):
-            f = jax.vmap(body, axis_name=axis_name)
+            if nested is not None:
+                f = body
+                for name, _ in reversed(nested):
+                    f = jax.vmap(f, axis_name=name)
+            else:
+                f = jax.vmap(body, axis_name=axis_name)
             if d_sz is not None:
                 f = jax.vmap(f, axis_name=data_axis) if data_axis \
                     else jax.vmap(f)

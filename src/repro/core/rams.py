@@ -60,6 +60,39 @@ def default_levels(p: int, levels: Optional[int] = None) -> Sequence[int]:
     return [base + (1 if i < rem else 0) for i in range(levels)]
 
 
+def nested_level_bits(p_outer: int, p_inner: int,
+                      levels: Optional[int] = None) -> Sequence[int]:
+    """Level schedule aligned to a nested (outer × inner) axis pair.
+
+    The multi-level mapping of arXiv 1410.6754 §4: the **first** level
+    splits the data across the 2^b0 = ``p_outer`` slow-axis slices (its
+    all_to_all is the only exchange that crosses the outer axis); every
+    subsequent level recurses inside one inner-axis subcube, so its
+    collectives retarget onto the fast intra axis (see
+    ``repro.core.comm.NestedCollectives``).  With ``levels=1`` the single
+    level spans both axes (one all-to-all over the whole mesh — the
+    samplesort structure).
+
+    >>> nested_level_bits(16, 64)
+    [4, 3, 3]
+    >>> nested_level_bits(16, 64, levels=2)
+    [4, 6]
+    >>> nested_level_bits(4, 16, levels=1)
+    [6]
+    """
+    d_o = p_outer.bit_length() - 1
+    d_i = p_inner.bit_length() - 1
+    assert p_outer.bit_count() == 1 and p_inner.bit_count() == 1
+    if d_o == 0:
+        return list(default_levels(p_inner, levels))
+    if d_i == 0:
+        return [d_o]
+    if levels == 1:
+        return [d_o + d_i]
+    inner_levels = None if levels is None else max(1, levels - 1)
+    return [d_o] + list(default_levels(p_inner, inner_levels))
+
+
 def _mix32(x):
     """Bijective 32-bit mix (murmur3 finalizer).
 
@@ -90,23 +123,44 @@ def _composite(keys_u32, pe, pos, valid):
 
 def rams(shard: SortShard, axis_name: str, p: int, *,
          seed: int = 0xA35, levels: Optional[int] = None,
+         level_bits: Optional[Sequence[int]] = None,
          oversample: int = 4, tie_break: bool = True,
          shuffle: bool = True, slot_factor: float = 2.0) -> RAMSResult:
     """Sort over the whole axis.  Requires uint32 keys (u64 keys would need
-    a 128-bit sample composite; psort's key transform covers f32/i32/u32)."""
+    a 128-bit sample composite; psort's key transform covers f32/i32/u32).
+
+    ``level_bits`` overrides the level schedule with an explicit per-level
+    bit split (summing to log2 p, high bits first) — on a hierarchical
+    mesh the caller aligns the first level to the outer-axis size with
+    :func:`nested_level_bits`, which is what confines every later level's
+    collectives to the fast intra axis.  The schedule, not the mesh, is
+    what the sort depends on: a flat run with the same ``level_bits`` is
+    bitwise-identical to the nested run.
+
+    Each phase is traced under a :func:`repro.core.comm.tagged` scope
+    (``shuffle``, ``level0``, ``level1``, …), so a counting backend
+    attributes per-level launches and bytes.
+    """
     if shard.keys.dtype != jnp.uint32:
         raise ValueError("rams requires uint32 keys (use psort's transform)")
     d = p.bit_length() - 1
     assert p.bit_count() == 1 and shard.capacity < (1 << _POS_BITS)
-    bits = default_levels(p, levels)
+    if level_bits is not None:
+        bits = [int(b) for b in level_bits]
+        if sum(bits) != d or any(b < 1 for b in bits):
+            raise ValueError(f"level_bits {bits} must be >=1 each and sum "
+                             f"to log2(p)={d}")
+    else:
+        bits = default_levels(p, levels)
     cap = shard.capacity
     overflow = jnp.int32(0)
     me = comm.axis_index(axis_name)
 
     if shuffle:
-        shard, ovf = alltoall_shuffle(
-            shard, axis_name, p, seed,
-            slot_cap=_slot_cap(cap, p, slot_factor))
+        with comm.tagged("shuffle"):
+            shard, ovf = alltoall_shuffle(
+                shard, axis_name, p, seed,
+                slot_cap=_slot_cap(cap, p, slot_factor))
         overflow = overflow + ovf
     shard = local_sort(shard)
     # drop the shuffle's p·slot_cap slot buffer down to 2× the working
@@ -120,10 +174,12 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
 
     h = d                                   # dims of the current subcube
     for lvl, b in enumerate(bits):
-        shard, ovf = _rams_level(shard, axis_name, p, h, b,
-                                 seed=seed + 7919 * (lvl + 1),
-                                 oversample=oversample, tie_break=tie_break,
-                                 slot_factor=slot_factor)
+        with comm.tagged(f"level{lvl}"):
+            shard, ovf = _rams_level(shard, axis_name, p, h, b,
+                                     seed=seed + 7919 * (lvl + 1),
+                                     oversample=oversample,
+                                     tie_break=tie_break,
+                                     slot_factor=slot_factor)
         overflow = overflow + ovf
         h -= b
     return RAMSResult(shard, overflow)

@@ -49,6 +49,15 @@ class CostModel:
     local_rate — words/s of local sort/merge/partition throughput;
     slot_overhead — static slot provisioning factor of the a2a exchanges;
     meta       — free-form fit diagnostics (R², sweep grid, host, …).
+
+    On a **hierarchical mesh** (inter-host × intra-host, see
+    ``repro.core.comm.NestedCollectives``) the flat constants describe the
+    slow *outer* axis; the three ``*_inner`` fields hold the fast
+    intra-axis constants ``benchmarks/calibrate.py`` fits from a two-tier
+    sweep (``None`` = same as the outer axis).  Intra-axis fused
+    collectives pay no ``alpha_hop`` pipeline fill — only the outer-axis
+    level of a nested RAMS is charged ``alpha_hop`` + the slow-link
+    ``beta`` (cf. the multi-level scheme of arXiv 1410.6754).
     """
 
     name: str = "tpu-v5e-prior"
@@ -58,6 +67,9 @@ class CostModel:
     beta: float = BYTES_PER_WORD / 50e9      # 50 GB/s per ICI link
     local_rate: float = 2e9
     slot_overhead: float = 2.2
+    alpha_inner: Optional[float] = None      # intra-axis p2p step
+    alpha_c_inner: Optional[float] = None    # intra-axis fused launch
+    beta_inner: Optional[float] = None       # intra-axis s/word
     meta: Dict = dataclasses.field(default_factory=dict, compare=False)
 
     # -- derived ----------------------------------------------------------
@@ -65,6 +77,24 @@ class CostModel:
     def coll(self, p: float) -> float:
         """Cost of one fused collective at axis size p."""
         return self.alpha_c + self.alpha_hop * _hops(p)
+
+    @property
+    def a_inner(self) -> float:
+        return self.alpha if self.alpha_inner is None else self.alpha_inner
+
+    @property
+    def ac_inner(self) -> float:
+        return self.alpha_c if self.alpha_c_inner is None \
+            else self.alpha_c_inner
+
+    @property
+    def b_inner(self) -> float:
+        return self.beta if self.beta_inner is None else self.beta_inner
+
+    def coll_inner(self, p: float) -> float:
+        """One fused collective on the fast intra axis: launch cost only —
+        intra-host links pay no torus-diameter pipeline fill."""
+        return self.ac_inner
 
     # -- JSON round-trip --------------------------------------------------
 
@@ -138,15 +168,48 @@ def cost_rquick(n, p, model: CostModel = DEFAULT_MODEL):
             + (npp * _lg(n) + npp * d) / m.local_rate)
 
 
-def cost_rams(n, p, levels=None, model: CostModel = DEFAULT_MODEL):
+def cost_rams(n, p, levels=None, model: CostModel = DEFAULT_MODEL,
+              mesh_shape=None):
     m = model
     npp = n / p
     d = _d(p)
+    if mesh_shape is not None:
+        return _cost_rams_nested(n, p, levels, m, mesh_shape)
     l = levels or max(1, min(3, round(d / 6)))
     k = p ** (1.0 / l)
     return ((3 * l + 1) * m.coll(p)             # samples, hist, a2a / level
             + m.beta * npp * (m.slot_overhead * l + 1)  # l exchanges + shuffle
             + (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate)
+
+
+def _cost_rams_nested(n, p, levels, m: CostModel, mesh_shape):
+    """Hierarchical RAMS on an (outer × inner) mesh: only the shuffle and
+    the first (outer-axis) level cross the slow links — they alone are
+    charged ``alpha_hop`` pipeline fill and the slow-link ``beta``; every
+    later level runs inside an intra subcube at the inner-axis constants
+    (the 1410.6754 multi-level argument for why deep hierarchies win)."""
+    p_o, p_i = mesh_shape
+    npp = n / p
+    if p_o <= 1:                       # pure-intra: no slow-axis level
+        l = levels or max(1, min(3, round(_d(p_i) / 6)))
+        k = max(2.0, p_i ** (1.0 / l))
+        return ((3 * l + 1) * m.coll_inner(p_i)
+                + m.b_inner * npp * (m.slot_overhead * l + 1)
+                + (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate)
+    l_i = 0 if p_i <= 1 or levels == 1 else \
+        (max(1, levels - 1) if levels else
+         max(1, min(3, round(_d(p_i) / 6))))
+    l = 1 + l_i
+    # shuffle + level 0 span the whole mesh: one slow-axis stage plus one
+    # intra stage each (the NestedCollectives decomposition)
+    outer = (4 * m.coll(p) + 4 * m.coll_inner(p_i)
+             + m.beta * npp * (m.slot_overhead + 1)
+             + m.b_inner * npp * (m.slot_overhead + 1))
+    inner = (3 * l_i * m.coll_inner(p_i)
+             + m.b_inner * npp * m.slot_overhead * l_i)
+    k = max(2.0, p ** (1.0 / l))
+    local = (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate
+    return outer + inner + local
 
 
 def cost_bitonic(n, p, model: CostModel = DEFAULT_MODEL):
@@ -179,14 +242,18 @@ COSTS = {
 
 
 def select_algorithm(n: int, p: int,
-                     model: Optional[CostModel] = None) -> str:
+                     model: Optional[CostModel] = None,
+                     levels: Optional[int] = None,
+                     mesh_shape=None) -> str:
     """The paper's four-regime selection: argmin of the model costs.
 
     GatherM's output lives on one PE (no balance guarantee) → only
     eligible for very sparse inputs (§VII-A(1)).  RAMS needs dense input
     for its samples/slots to amortize.  ``model`` defaults to the prior
     profile; pass ``CostModel.load("profiles/<machine>.json")`` to select
-    with measured constants.
+    with measured constants.  ``levels`` / ``mesh_shape`` parameterize the
+    RAMS candidate the way :func:`repro.core.api.psort` would run it
+    (nested meshes charge slow-axis constants for the outer level only).
     """
     m = model if model is not None else DEFAULT_MODEL
     cands = dict(COSTS)
@@ -194,14 +261,25 @@ def select_algorithm(n: int, p: int,
         cands.pop("gatherm")
     if n <= 4 * p:
         cands.pop("rams", None)
-    return min(cands, key=lambda a: cands[a](max(1, n), p, model=m))
+
+    def cost(a):
+        if a == "rams":
+            return cost_rams(max(1, n), p, levels=levels, model=m,
+                             mesh_shape=mesh_shape)
+        return cands[a](max(1, n), p, model=m)
+
+    return min(cands, key=cost)
 
 
 def regime_table(p: int, exponents=range(-8, 24),
-                 model: Optional[CostModel] = None):
-    """n/p sweep → selected algorithm; used by tests and EXPERIMENTS.md."""
+                 model: Optional[CostModel] = None,
+                 levels: Optional[int] = None, mesh_shape=None):
+    """n/p sweep → selected algorithm; used by tests and EXPERIMENTS.md.
+    ``levels`` / ``mesh_shape`` forward to the RAMS cost exactly as
+    :func:`select_algorithm` does."""
     rows = []
     for e in exponents:
         n = max(1, int(p * (2.0 ** e)))
-        rows.append((e, n, select_algorithm(n, p, model=model)))
+        rows.append((e, n, select_algorithm(n, p, model=model, levels=levels,
+                                            mesh_shape=mesh_shape)))
     return rows

@@ -28,17 +28,44 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def sort_mesh(p: Optional[int] = None, d: int = 1, *, axis: str = "sort",
-              data_axis: str = "data", devices=None) -> Mesh:
-    """A (d, p) device mesh with axes (``data_axis``, ``axis``).
+              data_axis: str = "data",
+              shape: Optional[Tuple[int, int]] = None,
+              mesh_axes: Tuple[str, str] = ("inter", "intra"),
+              devices=None) -> Mesh:
+    """A device mesh for ``psort``: flat (d, p) or hierarchical nested.
 
-    The layout batched ``psort`` sorts over: row r of a (d, n) key batch
-    lives on the r-th data-axis slice and is sorted by the p devices of its
-    sort-axis subgroup.  ``p`` defaults to ``len(devices) // d`` — every
-    available device joins some subgroup.
+    Flat form (default): a (d, p) mesh with axes (``data_axis``, ``axis``)
+    — row r of a (d, n) key batch lives on the r-th data-axis slice and is
+    sorted by the p devices of its sort-axis subgroup.  ``p`` defaults to
+    ``len(devices) // d`` — every available device joins some subgroup.
+
+    Hierarchical form — ``shape=(p_outer, p_inner)`` builds the nested
+    (``data_axis``?, *inter*, *intra*) mesh that hierarchy-aware ``psort``
+    sorts over: the outer ``mesh_axes[0]`` is the slow (inter-host) axis
+    carrying exactly one AMS level's all_to_all, the inner ``mesh_axes[1]``
+    the fast (intra-host) axis every other level recurses inside.  The
+    data axis leads only when ``d > 1`` (batched keys).  Flat PE index =
+    ``outer · p_inner + inner``, so enumerating the nested mesh in row-major
+    order visits the same devices as the flat mesh of ``p_outer·p_inner``.
+
+    >>> import jax
+    >>> m = sort_mesh(shape=(1, 1), devices=jax.devices()[:1])
+    >>> [(a, m.shape[a]) for a in m.axis_names]
+    [('inter', 1), ('intra', 1)]
     """
     devs = list(devices) if devices is not None else jax.devices()
     if d < 1:
         raise ValueError(f"d={d} must be >= 1")
+    if shape is not None:
+        if p is not None and p != int(np.prod(shape)):
+            raise ValueError(f"p={p} inconsistent with shape={tuple(shape)}")
+        p_o, p_i = (int(v) for v in shape)
+        if p_o < 1 or p_i < 1 or d * p_o * p_i > len(devs):
+            raise ValueError(f"requested mesh ({d}, {p_o}, {p_i}) needs "
+                             f"{d * p_o * p_i} devices; have {len(devs)}")
+        dims = (d, p_o, p_i) if d > 1 else (p_o, p_i)
+        names = ((data_axis,) if d > 1 else ()) + tuple(mesh_axes)
+        return Mesh(np.array(devs[:d * p_o * p_i]).reshape(dims), names)
     p = p if p is not None else len(devs) // d
     if p < 1 or d * p > len(devs):
         raise ValueError(f"requested mesh ({d}, {p}) needs {d * p} devices; "

@@ -1,0 +1,80 @@
+"""The perf-regression gate: per-cell ratios against the committed
+baseline, with the acceptance bar that a deliberately 2×-inflated cell
+fails the gate."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_bench import compare, main as check_main   # noqa: E402
+
+
+def _bench(cells):
+    """{(p, algo, e): us} → bench-JSON shaped dict."""
+    bench = {}
+    for (p, algo, e), us in cells.items():
+        bench.setdefault(p, {}).setdefault(algo, {})[e] = us
+    return {"machine": "test", "bench": bench}
+
+
+BASE = {("64", "rquick", "0"): 100.0, ("64", "rams", "2"): 200.0,
+        ("256", "rfis", "-3"): 50.0}
+
+
+def test_identical_runs_pass():
+    res = compare(_bench(BASE), _bench(BASE))
+    assert not res["fail"] and not res["warn"]
+    assert len(res["ok"]) == 3
+
+
+def test_inflated_cell_fails_gate():
+    fresh = dict(BASE)
+    fresh[("64", "rams", "2")] = 400.0                 # 2x slowdown
+    res = compare(_bench(BASE), _bench(fresh))
+    assert [k for k, _ in res["fail"]] == [("64", "rams", "2")]
+
+
+def test_warn_band_and_improvements():
+    fresh = dict(BASE)
+    fresh[("64", "rquick", "0")] = 130.0               # 1.3x: warn
+    fresh[("256", "rfis", "-3")] = 25.0                # 2x faster
+    res = compare(_bench(BASE), _bench(fresh))
+    assert not res["fail"]
+    assert [k for k, _ in res["warn"]] == [("64", "rquick", "0")]
+    assert [k for k, _ in res["improved"]] == [("256", "rfis", "-3")]
+
+
+def test_new_and_dropped_cells_do_not_fail():
+    fresh = dict(BASE)
+    fresh[("1024", "rams@16x64", "0")] = 999.0         # new: no baseline
+    del fresh[("256", "rfis", "-3")]
+    res = compare(_bench(BASE), _bench(fresh))
+    assert not res["fail"]
+    assert [k for k, _ in res["new"]] == [("1024", "rams@16x64", "0")]
+    assert [k for k, _ in res["dropped"]] == [("256", "rfis", "-3")]
+
+
+def test_cli_exit_codes(tmp_path):
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(_bench(BASE)))
+    ok_p = tmp_path / "ok.json"
+    ok_p.write_text(json.dumps(_bench(BASE)))
+    bad = dict(BASE)
+    bad[("64", "rquick", "0")] = 250.0
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(_bench(bad)))
+    assert check_main(["--baseline", str(base_p), "--fresh", str(ok_p)]) == 0
+    assert check_main(["--baseline", str(base_p), "--fresh", str(bad_p)]) == 1
+
+
+def test_cli_against_committed_baseline():
+    """The committed baseline gates itself green (the CI wiring sanity)."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_bench.py"),
+         "--fresh", str(REPO / "BENCH_calibrate.json")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "perf gate OK" in proc.stdout

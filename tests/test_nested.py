@@ -1,0 +1,332 @@
+"""Hierarchical nested-axis meshes: the (inter × intra) contract.
+
+Acceptance bar of the nested-axis PR: ``psort(mesh_shape=(p_o, p_i))``
+runs every AMS level's grouped collectives over a *named* axis of a nested
+mesh — the first level's all_to_all is the only level exchange crossing
+the slow outer axis — and is **bitwise identical** to the flat
+``axis_index_groups`` path at the same total p and level schedule, on both
+backends (shard_map over a real (inter, intra) device mesh; sim via
+``sim_map(nested=...)``).  Plus the grouped-collective edge cases *under*
+the nested view (single-member outer axis, strided inner-axis groups,
+forced ring chunking across the outer axis) and the counted-trace
+attribution invariants (per-level tags partition the totals; inter vs.
+intra split).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm, selection
+from repro.core.api import psort, trace_collectives
+from repro.core.rams import nested_level_bits
+from repro.data.distributions import generate_instance
+from repro.dist.sharding import sort_mesh
+
+DISTS = ["Uniform", "Zero", "Staggered", "DeterDupl"]
+
+
+def _assert_nested_matches_flat(x, p_o, p_i, algorithm, backend,
+                                levels=None):
+    """Nested run ≡ flat run of the same level schedule (keys, perm,
+    counts, overflow) — the bitwise-identity acceptance bar."""
+    p = p_o * p_i
+    out_n, info_n = psort(x, mesh_shape=(p_o, p_i), algorithm=algorithm,
+                          backend=backend, return_info=True, levels=levels)
+    kw = {}
+    if algorithm == "rams":
+        kw["level_bits"] = tuple(nested_level_bits(p_o, p_i, levels))
+    out_f, info_f = psort(x, p=p, algorithm=algorithm, backend=backend,
+                          return_info=True, **kw)
+    assert info_n["overflow"] == 0, (algorithm, backend)
+    assert info_n["mesh_shape"] == (p_o, p_i)
+    assert (np.asarray(out_n) == np.asarray(out_f)).all(), \
+        (algorithm, backend)
+    assert (info_n["perm"] == info_f["perm"]).all(), (algorithm, backend)
+    assert (info_n["counts"] == info_f["counts"]).all(), (algorithm, backend)
+    assert (np.asarray(out_n) == np.sort(np.asarray(x), axis=-1)).all()
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: bitwise identity nested vs. flat.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["rams", "rquick", "ssort", "bitonic",
+                                       "rfis", "gatherm", "allgatherm"])
+def test_shard_map_2x4_nested_bitwise_vs_flat(algorithm):
+    x = generate_instance("Uniform", 8, 37 * 8, seed=3).astype(np.int32)
+    _assert_nested_matches_flat(x, 2, 4, algorithm, "shard_map")
+
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_sim_4x16_nested_rams_bitwise_vs_flat(dist):
+    p = 64
+    x = generate_instance(dist, p, 24 * p, seed=5).astype(np.int32)
+    _assert_nested_matches_flat(x, 4, 16, "rams", "sim")
+
+
+def test_sim_nested_rquick_bitwise_vs_flat():
+    p = 64
+    x = generate_instance("Staggered", p, 16 * p, seed=9).astype(np.int32)
+    _assert_nested_matches_flat(x, 8, 8, "rquick", "sim")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dist", ["Uniform", "Gaussian", "BucketSorted",
+                                  "g-Group", "Zero", "DeterDupl",
+                                  "RandDupl", "Staggered", "Mirrored",
+                                  "AllToOne", "Reverse"])
+def test_sim_16x64_nested_rams_bitwise_vs_flat(dist):
+    """The full distribution suite at the 16×64 = 1024-PE sim mesh."""
+    p = 1024
+    x = generate_instance(dist, p, 4 * p, seed=7).astype(np.int32)
+    _assert_nested_matches_flat(x, 16, 64, "rams", "sim")
+
+
+def test_batched_nested_rows_match_unbatched():
+    """2-D keys over a (data, inter, intra) mesh: row r ≡ 1-D nested run."""
+    d, p_o, p_i = 2, 2, 2
+    xs = np.stack([generate_instance("Uniform", 4, 11 * 4, seed=13 + r)
+                   .astype(np.int32) for r in range(d)])
+    out = np.asarray(psort(xs, mesh_shape=(p_o, p_i), algorithm="rams"))
+    for r in range(d):
+        ref = np.asarray(psort(xs[r], mesh_shape=(p_o, p_i),
+                               algorithm="rams"))
+        assert (out[r] == ref).all()
+        assert (ref == np.sort(xs[r])).all()
+
+
+def test_single_member_outer_axis_is_pure_intra():
+    """mesh_shape=(1, p): the whole sort lives on the intra axis and is
+    bitwise the flat run; the trace shows zero outer-axis payload."""
+    p = 8
+    x = generate_instance("Uniform", p, 20 * p, seed=17).astype(np.int32)
+    _assert_nested_matches_flat(x, 1, p, "rams", "sim")
+    t = trace_collectives(20 * p, mesh_shape=(1, p), algorithm="rams")
+    ax = t.by_axis()
+    assert ax["intra"]["wire_bytes"] > 0
+    # the decomposition still launches outer-stage collectives on the
+    # size-1 axis (full-axis phases), but they carry the whole payload to
+    # a single participant — the intra axis does all real work.  What must
+    # hold: no *level > 0* event ever names the outer axis.
+    lvl_tags = [tg for tg in t.tags() if tg.startswith("level") and
+                tg != "level0"]
+    for tg in lvl_tags:
+        assert "inter" not in t.filter(tag=tg).axes()
+
+
+# ---------------------------------------------------------------------------
+# Grouped-collective edge cases under the nested view.
+# ---------------------------------------------------------------------------
+
+PO, PI = 4, 4
+P = PO * PI
+AXES = (("inter", PO), ("intra", PI))
+# strided groups on the inner axis: same non-adjacent pattern per slice
+STRIDED_INNER = [[s * PI + i for i in g] for s in range(PO)
+                 for g in ([0, 2], [1, 3])]
+# groups spanning whole outer slices (forced across the outer axis)
+OUTER_PAIRS = [[s * PI + i for s in ss for i in range(PI)]
+               for ss in ([0, 1], [2, 3])]
+
+
+def _grouped_body(groups, gsize):
+    def fn(v):
+        g = comm.all_gather(v, "sort", axis_index_groups=groups, tiled=True)
+        s = comm.psum(v, "sort", axis_index_groups=groups)
+        a = comm.all_to_all(jnp.tile(v, (gsize,)), "sort", split_axis=0,
+                            concat_axis=0, axis_index_groups=groups,
+                            tiled=True)
+        return g, s, a
+    return fn
+
+
+def _nested_vs_flat(fn, x, chunk_bytes=None):
+    impl = comm.SimCollectives(chunk_bytes=chunk_bytes) \
+        if chunk_bytes is not None else None
+    nest = jax.jit(comm.sim_map(fn, "sort", P, impl=impl, nested=AXES))(
+        x.reshape((PO, PI) + x.shape[1:]))
+    flat = jax.jit(comm.sim_map(fn, "sort", P, impl=impl))(x)
+    for a, b in zip(jax.tree.leaves(nest), jax.tree.leaves(flat)):
+        np.testing.assert_array_equal(
+            np.asarray(a).reshape(np.asarray(b).shape), np.asarray(b))
+
+
+@pytest.mark.parametrize("gname,groups", [
+    ("strided_inner", STRIDED_INNER),
+    ("singles", [[i] for i in range(P)]),
+    ("inner_slices", [[s * PI + i for i in range(PI)] for s in range(PO)]),
+    ("outer_pairs", OUTER_PAIRS),
+])
+def test_grouped_edge_cases_under_nested_view(gname, groups):
+    x = jnp.arange(P * 3, dtype=jnp.int32).reshape(P, 3) * 5 + 2
+    _nested_vs_flat(_grouped_body(groups, len(groups[0])), x)
+
+
+@pytest.mark.parametrize("gname,groups", [
+    ("strided_inner", STRIDED_INNER),
+    ("outer_pairs", OUTER_PAIRS),
+])
+def test_grouped_forced_ring_under_nested_view(gname, groups):
+    """chunk_bytes=0 forces the chunked ring evaluation of every grouped
+    collective — across the outer axis for the outer_pairs groups."""
+    x = jnp.arange(P * 3, dtype=jnp.int32).reshape(P, 3) * 5 + 2
+    _nested_vs_flat(_grouped_body(groups, len(groups[0])), x, chunk_bytes=0)
+
+
+def test_nested_view_rejects_misaligned_groups_and_perms():
+    view = comm.NestedCollectives(comm.SIM, "sort", AXES)
+    with pytest.raises(NotImplementedError):
+        # group straddles an outer-slice boundary without covering it
+        view._classify_groups([[0, 1, 2, 3, 4, 5], [6, 7] +
+                               list(range(8, 12)), list(range(12, 16))])
+    with pytest.raises(NotImplementedError):
+        # permutation mixes both axes (flat +1 ring crosses slices)
+        view._factor_perm([(i, (i + 1) % P) for i in range(P)])
+    with pytest.raises(NotImplementedError):
+        comm.NestedCollectives(comm.SIM, "sort", ((("a", 2),)))
+
+
+# ---------------------------------------------------------------------------
+# Counted-trace attribution.
+# ---------------------------------------------------------------------------
+
+
+def test_per_level_attribution_sums_to_totals():
+    """The shuffle/level tags partition the nested trace — per-level
+    launches and bytes sum back to the whole-trace totals."""
+    t = trace_collectives(32 * 64, mesh_shape=(4, 16), algorithm="rams")
+    tot = t.summary()
+    per_tag = t.by_tag()
+    assert set(per_tag) == {"shuffle", "level0", "level1"}
+    assert sum(s["launches"] for s in per_tag.values()) == tot["launches"]
+    assert sum(s["wire_bytes"] for s in per_tag.values()) == \
+        tot["wire_bytes"]
+    per_axis = t.by_axis()
+    assert set(per_axis) == {"inter", "intra"}
+    assert sum(s["wire_bytes"] for s in per_axis.values()) == \
+        tot["wire_bytes"]
+
+
+def test_intra_levels_match_flat_trace_per_tag():
+    """Levels after the first never cross the outer axis, and their events
+    are identical (primitive, bytes) to the flat-axis oracle's."""
+    n, p_o, p_i = 32 * 64, 4, 16
+    bits = tuple(nested_level_bits(p_o, p_i))
+    tn = trace_collectives(n, mesh_shape=(p_o, p_i), algorithm="rams")
+    tf = trace_collectives(n, p_o * p_i, "rams", level_bits=bits)
+    # flat trace carries the same tags on the virtual axis
+    assert tn.tags() == tf.tags()
+    for tag in tn.tags():
+        if tag in ("shuffle", "level0"):
+            continue                       # decomposed: two-stage launches
+        sub_n, sub_f = tn.filter(tag=tag), tf.filter(tag=tag)
+        assert sub_n.axes() == ["intra"], tag
+        assert sub_n.counts() == sub_f.counts(), tag
+        assert sub_n.payload_bytes() == sub_f.payload_bytes(), tag
+
+
+def test_outer_axis_carries_exactly_one_level_a2a():
+    """The issue's headline invariant: the slow axis carries the shuffle
+    and exactly one level's all_to_all volume — no other level."""
+    t = trace_collectives(16 * 1024, mesh_shape=(16, 64), algorithm="rams")
+    inter_a2a = t.filter(primitive="all_to_all", axis="inter")
+    assert inter_a2a.tags() == ["level0", "shuffle"]
+    # one slotted exchange = 3 launches (keys, payload, per-slot counts)
+    assert len(inter_a2a.filter(tag="level0").events) == 3
+    # and no inter-axis events of any primitive at later levels
+    later = [tg for tg in t.tags() if tg.startswith("level")
+             and tg not in ("level0",)]
+    assert later, "expected a multi-level schedule at 16x64"
+    for tg in later:
+        assert t.filter(tag=tg).axes() == ["intra"], tg
+
+
+def test_trace_nested_d_invariance():
+    """Adding data-axis rows leaves the per-PE nested trace unchanged."""
+    t1 = trace_collectives(32 * 16, mesh_shape=(4, 4), algorithm="rams")
+    t3 = trace_collectives(32 * 16, mesh_shape=(4, 4), algorithm="rams",
+                           d=3)
+    assert t1.summary() == t3.summary()
+    assert t1.by_axis() == t3.by_axis()
+
+
+# ---------------------------------------------------------------------------
+# levels= through psort / regime_table; samplesort structure at levels=1.
+# ---------------------------------------------------------------------------
+
+
+def test_levels_plumbed_through_psort():
+    p = 64
+    x = generate_instance("Uniform", p, 16 * p, seed=23).astype(np.int32)
+    out1, i1 = psort(x, p=p, algorithm="rams", backend="sim", levels=1,
+                     return_info=True)
+    out2, i2 = psort(x, p=p, algorithm="rams", backend="sim", levels=2,
+                     return_info=True)
+    assert i1["overflow"] == 0 and i2["overflow"] == 0
+    assert (np.asarray(out1) == np.sort(x)).all()
+    assert (np.asarray(out2) == np.sort(x)).all()
+    # the schedules differ: level counts show up in the counted traces
+    t1 = trace_collectives(16 * p, p, "rams", levels=1)
+    t2 = trace_collectives(16 * p, p, "rams", levels=2)
+    assert set(t1.tags()) == {"shuffle", "level0"}
+    assert set(t2.tags()) == {"shuffle", "level0", "level1"}
+    with pytest.raises(ValueError):
+        psort(x, p=p, algorithm="rquick", backend="sim", levels=2)
+
+
+def test_levels1_matches_samplesort_structure():
+    """One AMS level = samplesort's single-exchange structure: the counted
+    traces agree on every fused collective (one sample gather; shuffle +
+    exchange a2a at 3 launches each — keys, payload, slot counts).  Only
+    the ppermute prefix-scan of AMS's perfect in-group balancing remains."""
+    n, p = 32 * 64, 64
+    tr = trace_collectives(n, p, "rams", levels=1)
+    ts = trace_collectives(n, p, "ssort")
+    assert tr.counts()["all_to_all"] == ts.counts()["all_to_all"]
+    assert tr.counts()["all_gather"] == ts.counts()["all_gather"] == 1
+    assert set(ts.counts()) == {"all_to_all", "all_gather"}
+    assert set(tr.counts()) == {"all_to_all", "all_gather", "ppermute"}
+
+
+def test_regime_table_levels_and_mesh_shape():
+    base = selection.regime_table(1024, range(4, 8))
+    lvl1 = selection.regime_table(1024, range(4, 8), levels=1)
+    nested = selection.regime_table(1024, range(4, 8),
+                                    mesh_shape=(16, 64))
+    assert [len(r) for r in (base, lvl1, nested)] == [4, 4, 4]
+    # a cheap intra axis should only ever make RAMS *more* competitive
+    m = selection.CostModel(alpha_c_inner=1e-9, beta_inner=1e-12)
+    for e in range(2, 10):
+        n = 1024 * (2 ** e)
+        assert selection.cost_rams(n, 1024, model=m, mesh_shape=(16, 64)) \
+            <= selection.cost_rams(n, 1024, model=m) * 1.001
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction / validation.
+# ---------------------------------------------------------------------------
+
+
+def test_sort_mesh_nested_shapes_and_errors():
+    m = sort_mesh(shape=(2, 4))
+    assert dict(m.shape) == {"inter": 2, "intra": 4}
+    m2 = sort_mesh(shape=(2, 2), d=2)
+    assert dict(m2.shape) == {"data": 2, "inter": 2, "intra": 2}
+    with pytest.raises(ValueError):
+        sort_mesh(shape=(64, 64))            # more devices than exist
+    with pytest.raises(ValueError):
+        sort_mesh(p=16, shape=(2, 4))        # inconsistent p
+
+
+def test_psort_nested_rejects_bad_args():
+    x = np.arange(64, dtype=np.int32)
+    with pytest.raises(ValueError):
+        psort(x, p=16, mesh_shape=(2, 4), backend="sim")   # p mismatch
+    with pytest.raises(ValueError):
+        psort(x, mesh_shape=(3, 4), backend="sim")         # not a power of 2
+    mesh_flat = sort_mesh(4, d=2)
+    with pytest.raises(ValueError):
+        psort(x, mesh_shape=(2, 4), mesh=mesh_flat)        # wrong axes

@@ -1,0 +1,136 @@
+"""Perf-regression gate (CI `calibrate` job).
+
+Compares a freshly measured ``BENCH_calibrate.json`` (written by
+``benchmarks/calibrate.py``) against the committed baseline, cell by cell
+(one cell = one ``bench[p][algorithm][log2(n/p)]`` wall-clock in µs):
+
+  * **fail**  — any common cell slower than ``--fail-ratio``  (default 1.5×);
+  * **warn**  — slower than ``--warn-ratio`` (default 1.2×);
+  * **report** — improvements (faster than 1/warn-ratio), cells new in the
+    fresh run (no baseline yet — e.g. a widened sweep), and cells the fresh
+    run dropped.
+
+Wall-clock gating across runner generations is noisy, which is exactly why
+the thresholds are ratios per cell rather than absolute times, and why the
+gate *fails* only on large regressions while merely warning on drift.
+When a legitimate change shifts the baseline (new machine, new sweep
+grid), regenerate and commit it:
+
+    PYTHONPATH=src python benchmarks/calibrate.py --p 64 256 --nested 8 8 \
+        --machine ci-ubuntu-sim --profile-dir /tmp/profiles
+
+Run the gate::
+
+    python tools/check_bench.py --fresh BENCH_fresh.json
+    python tools/check_bench.py --baseline BENCH_calibrate.json \
+        --fresh BENCH_fresh.json --fail-ratio 1.5 --warn-ratio 1.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def iter_cells(bench: dict):
+    """Yield ((p, algorithm, e), us) for every cell of a bench mapping."""
+    for p, algos in sorted(bench.items()):
+        for algo, cells in sorted(algos.items()):
+            for e, us in sorted(cells.items()):
+                yield (p, algo, e), float(us)
+
+
+def compare(baseline: dict, fresh: dict, fail_ratio: float = 1.5,
+            warn_ratio: float = 1.2) -> dict:
+    """Per-cell ratio comparison of two bench JSON dicts.
+
+    Returns {"fail": [...], "warn": [...], "improved": [...], "new": [...],
+    "dropped": [...], "ok": [...]}; each entry is (cell_key, ratio-or-None).
+    A cell fails when fresh/baseline > fail_ratio.
+    """
+    base_cells = dict(iter_cells(baseline.get("bench", {})))
+    fresh_cells = dict(iter_cells(fresh.get("bench", {})))
+    out = {"fail": [], "warn": [], "improved": [], "new": [], "dropped": [],
+           "ok": []}
+    for key, us in sorted(fresh_cells.items()):
+        if key not in base_cells:
+            out["new"].append((key, None))
+            continue
+        ratio = us / max(base_cells[key], 1e-9)
+        if ratio > fail_ratio:
+            out["fail"].append((key, ratio))
+        elif ratio > warn_ratio:
+            out["warn"].append((key, ratio))
+        elif ratio < 1.0 / warn_ratio:
+            out["improved"].append((key, ratio))
+        else:
+            out["ok"].append((key, ratio))
+    for key in sorted(base_cells):
+        if key not in fresh_cells:
+            out["dropped"].append((key, None))
+    return out
+
+
+def _fmt(key, ratio):
+    p, algo, e = key
+    cell = f"p={p} {algo} n/p=2^{e}"
+    return cell if ratio is None else f"{cell}: {ratio:.2f}x"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_calibrate.json"),
+                    help="committed baseline bench JSON")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly measured bench JSON to gate")
+    ap.add_argument("--fail-ratio", type=float, default=1.5)
+    ap.add_argument("--warn-ratio", type=float, default=1.2)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if baseline.get("machine") != fresh.get("machine"):
+        print(f"note: machine mismatch (baseline "
+              f"{baseline.get('machine')!r} vs fresh "
+              f"{fresh.get('machine')!r}) — ratios compare across machines")
+    elif baseline.get("host") != fresh.get("host"):
+        print(f"note: same machine label but different hosts (baseline "
+              f"{baseline.get('host')!r} vs fresh {fresh.get('host')!r}) — "
+              f"a freshly seeded baseline meets its real runner here for "
+              f"the first time; if ratios drift for hardware reasons, "
+              f"regenerate the baseline from this run's artifact")
+
+    res = compare(baseline, fresh, args.fail_ratio, args.warn_ratio)
+    n_common = sum(len(res[k]) for k in ("fail", "warn", "improved", "ok"))
+    print(f"compared {n_common} cells "
+          f"({len(res['new'])} new, {len(res['dropped'])} dropped)")
+    for key, ratio in res["improved"]:
+        print(f"IMPROVED  {_fmt(key, ratio)}")
+    for key, _ in res["new"]:
+        print(f"NEW       {_fmt(key, None)} (no baseline — commit a "
+              f"regenerated BENCH_calibrate.json to start gating it)")
+    for key, _ in res["dropped"]:
+        print(f"DROPPED   {_fmt(key, None)}")
+    for key, ratio in res["warn"]:
+        print(f"WARN      {_fmt(key, ratio)} "
+              f"(> {args.warn_ratio}x baseline)")
+    for key, ratio in res["fail"]:
+        print(f"FAIL      {_fmt(key, ratio)} "
+              f"(> {args.fail_ratio}x baseline)")
+    if res["fail"]:
+        print(f"perf gate FAILED: {len(res['fail'])} cell(s) above "
+              f"{args.fail_ratio}x — if intentional, regenerate the "
+              f"committed baseline (see module docstring)")
+        return 1
+    print(f"perf gate OK ({len(res['warn'])} warning(s), "
+          f"{len(res['improved'])} improvement(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
