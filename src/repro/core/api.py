@@ -219,7 +219,8 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
           levels: Optional[int] = None,
           capacity_factor: float = 2.0, return_info: bool = False,
           backend: str = "shard_map",
-          cost_model: Optional[selection.CostModel] = None, **algo_kw):
+          cost_model: Optional[selection.CostModel] = None,
+          fault_policy=None, **algo_kw):
     """Sort a host array over the ``axis`` mesh axis with p (emulated) PEs.
 
     Returns the sorted array (and an info dict with overflow / balance when
@@ -258,6 +259,24 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     from a ``profiles/<machine>.json`` written by
     ``benchmarks/calibrate.py``); defaults to the prior profile.
 
+    **Fault tolerance** — ``fault_policy`` (a
+    :class:`repro.runtime.failures.FaultPolicy`, sim backend only) runs
+    the sort under its :class:`repro.core.comm.FaultPlan`: each attempt
+    is freshly traced under a :class:`repro.core.comm.FaultyCollectives`
+    decorator, a fired kill (:class:`repro.core.comm.PEFailure`) or a
+    watchdog-flagged straggler excludes the PE, the topology is re-planned
+    (``repro.runtime.elastic.plan_sort_rescale`` — survivors rounded down
+    to a power of two, nested inner axis preserved while it fits), the
+    input is redistributed over the new mesh and the sort re-runs —
+    ``algorithm="auto"`` re-consults ``select_algorithm`` at the reduced
+    p.  Retries are bounded by ``policy.max_restarts`` via
+    ``repro.runtime.failures.run_with_restarts``.  Afterwards
+    ``policy.trace`` holds the merged :class:`repro.core.comm.CommTrace`
+    (injected ``fault:*`` events, ``rescale`` markers, regular launches)
+    and ``policy.attempts`` one record per attempt; with ``return_info``
+    the info dict gains ``"fault"`` and ``"comm_trace"`` entries.  See
+    ``docs/ARCHITECTURE.md`` ("Fault tolerance").
+
     >>> import numpy as np
     >>> from repro.core.api import psort
     >>> x = np.array([5, 3, 1, 4, 2, 9, 8, 6], np.int32)
@@ -278,6 +297,21 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     >>> np.asarray(psort(x, mesh_shape=(2, 2), algorithm="rams",
     ...                  backend="sim"))
     array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
+
+    A sort that loses PE 3 restarts at the reduced power-of-two topology
+    (4 PEs lose one → 3 survivors → p = 2) and still returns the exact
+    sorted multiset:
+
+    >>> from repro.core.comm import FaultPlan, kill_pe
+    >>> from repro.runtime.failures import FaultPolicy
+    >>> pol = FaultPolicy(plan=FaultPlan((kill_pe(3),)))
+    >>> np.asarray(psort(x, p=4, algorithm="rquick", backend="sim",
+    ...                  fault_policy=pol))
+    array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
+    >>> [a["p"] for a in pol.attempts]
+    [4, 2]
+    >>> [e.primitive for e in pol.trace.injected()]
+    ['fault:kill', 'rescale']
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
@@ -339,6 +373,18 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     n = keys.shape[-1]
     orig_dtype = keys.dtype
     u = key_to_uint(keys)
+
+    if fault_policy is not None:
+        if backend != "sim":
+            raise ValueError("fault_policy= requires backend='sim' (the "
+                             "fault-injection lane runs on emulated PEs)")
+        return _psort_faulty(
+            u, n, d, batched, orig_dtype, p=p, algorithm=algorithm,
+            policy=fault_policy, axis=axis, data_axis=data_axis,
+            mesh_shape=(p_o, p_i) if mesh_shape is not None else None,
+            mesh_axes=mesh_axes, levels=levels,
+            capacity_factor=capacity_factor, return_info=return_info,
+            cost_model=cost_model, algo_kw=algo_kw)
 
     per = -(-max(n, 1) // p)                       # ceil(n/p)
     capacity = max(4, int(np.ceil(per * capacity_factor)))
@@ -442,6 +488,165 @@ def _out_capacity(algorithm: str, n: int, p: int, per: int, capacity: int) -> in
     if algorithm in ("gatherm", "allgatherm"):
         return max(1, p * per)                     # concentrated output
     return capacity
+
+
+def _psort_sim_once(u, n, d, batched, *, axis, data_axis, p, mesh_shape,
+                    mesh_axes, algorithm, capacity_factor, levels, algo_kw,
+                    impl):
+    """One sim-backend sort attempt at a fixed topology under ``impl``.
+
+    The fault lane's executor: pads/redistributes the full key array over
+    the *current* p, builds the per-PE body, and runs it under a **fresh**
+    ``jax.jit`` — injection and counting act at trace time, so the cached
+    module-level jits (which would replay nothing on a cache hit) cannot
+    be used here.  Returns host arrays ``(keys, idx, counts, overflow)``
+    of shapes ``(d, p, out_cap) ×2, (d, p) ×2``.
+    """
+    per = -(-max(n, 1) // p)
+    capacity = max(4, int(np.ceil(per * capacity_factor)))
+    kw = dict(algo_kw)
+    if algorithm in ("rams", "ntb-ams"):
+        if mesh_shape is not None:
+            from .rams import nested_level_bits
+            kw.setdefault("level_bits", tuple(nested_level_bits(
+                mesh_shape[0], mesh_shape[1], levels)))
+        elif levels is not None:
+            kw.setdefault("levels", levels)
+    out_capacity = _out_capacity(algorithm, n, p, per, capacity)
+    body = _sort_body(axis, p, algorithm, capacity, out_capacity,
+                      tuple(sorted(kw.items())))
+    pad = pad_value(u.dtype)
+    row_counts = jnp.minimum(jnp.maximum(n - per * jnp.arange(p), 0),
+                             per).astype(jnp.int32)
+    lead = (d,) if batched else ()
+    flat = jnp.full(lead + (p * per,), pad, u.dtype)
+    flat = flat.at[..., :n].set(u)
+    da = data_axis if batched else None
+    if mesh_shape is not None:
+        p_o, p_i = mesh_shape
+        axes = ((mesh_axes[0], p_o), (mesh_axes[1], p_i))
+        keys_nd = flat.reshape(lead + (p_o, p_i, per))
+        counts_nd = jnp.broadcast_to(row_counts.reshape(p_o, p_i),
+                                     lead + (p_o, p_i))
+        runner = comm.sim_map(body, axis, p, impl=impl, nested=axes,
+                              mesh=(d, p) if batched else None, data_axis=da)
+        k, i, c, o = jax.jit(runner)(keys_nd, counts_nd)
+        k = k.reshape((d, p) + k.shape[-1:])
+        i = i.reshape((d, p) + i.shape[-1:])
+        c, o = c.reshape(d, p), o.reshape(d, p)
+    elif batched:
+        runner = comm.sim_map(body, axis, p, impl=impl, mesh=(d, p),
+                              data_axis=da)
+        k, i, c, o = jax.jit(runner)(flat.reshape(d, p, per),
+                                     jnp.broadcast_to(row_counts, (d, p)))
+    else:
+        runner = comm.sim_map(body, axis, p, impl=impl)
+        k, i, c, o = jax.jit(runner)(flat.reshape(p, per), row_counts)
+        k, i, c, o = k[None], i[None], c[None], o[None]
+    return np.asarray(k), np.asarray(i), np.asarray(c), np.asarray(o)
+
+
+def _psort_faulty(u, n, d, batched, orig_dtype, *, p, algorithm, policy,
+                  axis, data_axis, mesh_shape, mesh_axes, levels,
+                  capacity_factor, return_info, cost_model, algo_kw):
+    """The ``psort(..., fault_policy=...)`` driver (sim backend).
+
+    Attempt loop (bounded by ``repro.runtime.failures.run_with_restarts``):
+    trace the sort afresh under ``FaultyCollectives`` executing the
+    policy's surviving :class:`repro.core.comm.FaultPlan`; on a
+    :class:`repro.core.comm.PEFailure` — raised by a fired kill, or by
+    this driver for a watchdog-flagged straggler — exclude the PE, plan
+    the reduced topology (``elastic.plan_sort_rescale``), record a
+    ``rescale`` trace event carrying the new extent, and retry.  Progress
+    = shrinking p, so a rescale that fails to shrink trips the loop's
+    no-progress give-up rather than burning the restart budget.
+    """
+    from repro.runtime.elastic import plan_sort_rescale
+    from repro.runtime.failures import flag_stragglers, run_with_restarts
+
+    trace = policy.trace if policy.trace is not None else comm.CommTrace()
+    policy.trace = trace
+    log = policy.logger if policy.logger is not None else (lambda *a: None)
+    plan0 = policy.plan if policy.plan is not None else comm.FaultPlan()
+    if not isinstance(plan0, comm.FaultPlan):
+        plan0 = comm.FaultPlan(tuple(plan0))
+    state = {"p": p, "mesh_shape": mesh_shape, "plan": plan0,
+             "failed": ()}
+    policy.attempts.clear()
+
+    def attempt(_start):
+        p_cur, ms = state["p"], state["mesh_shape"]
+        algo = algorithm
+        if algo == "auto":
+            algo = selection.select_algorithm(n, p_cur, model=cost_model,
+                                              levels=levels, mesh_shape=ms)
+        rec = {"p": p_cur, "mesh_shape": ms, "algorithm": algo, "ok": False}
+        policy.attempts.append(rec)
+        # faulty outside counting: a killed launch records its fault:kill
+        # event but not the launch the dead PE never completed
+        fc = comm.FaultyCollectives(
+            comm.CountingCollectives(comm.SIM, trace), state["plan"], trace)
+        out = _psort_sim_once(
+            u, n, d, batched, axis=axis, data_axis=data_axis, p=p_cur,
+            mesh_shape=ms, mesh_axes=mesh_axes, algorithm=algo,
+            capacity_factor=capacity_factor, levels=levels,
+            algo_kw=algo_kw, impl=fc)
+        times = [policy.base_step_time * fc.fired_delays.get(pe, 1.0)
+                 for pe in range(p_cur)]
+        slow = flag_stragglers(times, k_mad=policy.k_mad,
+                               warmup=policy.warmup)
+        if slow:
+            raise comm.PEFailure(slow[0], phase="straggler")
+        rec["ok"] = True
+        return out + (p_cur, ms, algo)
+
+    def rescale(e, restarts):
+        p_cur, ms = state["p"], state["mesh_shape"]
+        rplan = plan_sort_rescale(p_cur, (e.pe,), mesh_shape=ms)
+        trace.add("rescale", 0, rplan.p_new, axis=axis, tag=e.phase,
+                  pe=e.pe)
+        why = "straggling" if e.phase == "straggler" else "failed"
+        log(f"[psort] PE {e.pe} {why} at p={p_cur}; "
+            f"rescaling to p={rplan.p_new}")
+        state["p"] = rplan.p_new
+        state["mesh_shape"] = rplan.mesh_shape
+        state["plan"] = state["plan"].surviving(e.pe, rplan.p_new)
+        state["failed"] += (e.pe,)
+
+    keys_out, idx_out, counts_out, overflow, p_fin, ms_fin, algo_fin = \
+        run_with_restarts(attempt, max_restarts=policy.max_restarts,
+                          retry_on=(comm.PEFailure,), on_failure=rescale,
+                          progress_fn=lambda: -state["p"], logger=log)
+
+    pe_range = range(1) if algo_fin == "allgatherm" else range(p_fin)
+    rows = [np.concatenate([keys_out[r, i, :counts_out[r, i]]
+                            for i in pe_range]) for r in range(d)]
+    result = uint_to_key(jnp.asarray(np.stack(rows) if batched else rows[0]),
+                         orig_dtype)
+    if return_info:
+        perms = [np.concatenate([idx_out[r, i, :counts_out[r, i]]
+                                 for i in range(p_fin)]) if n
+                 else np.zeros((0,), np.uint32) for r in range(d)]
+        info = {
+            "algorithm": algo_fin,
+            "backend": "sim",
+            "mesh_shape": ms_fin,
+            "counts": counts_out if batched else counts_out[0],
+            "overflow": int(np.asarray(overflow).sum()),
+            "balance": counts_out.max() / max(1.0, n / p_fin),
+            "perm": np.stack(perms) if batched else perms[0],
+            "n": n,
+            "d": d,
+            "fault": {
+                "p_final": p_fin,
+                "failed": state["failed"],
+                "restarts": len(policy.attempts) - 1,
+                "attempts": list(policy.attempts),
+            },
+            "comm_trace": trace,
+        }
+        return result, info
+    return result
 
 
 def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",

@@ -32,6 +32,20 @@ to the *current* :class:`Collectives` implementation:
     the machine profile of ``core/selection.py`` from these traces;
     :func:`counting` scopes one.
 
+  * :class:`FaultyCollectives` — a decorator backend (mirroring
+    :class:`CountingCollectives`) that executes a deterministic
+    :class:`FaultPlan` while the body is traced: a planned *kill* raises a
+    structured :class:`PEFailure` at the first collective of the matching
+    phase tag (the way a dead participant aborts a fused collective for
+    its whole group), a planned *delay* records a stretched simulated step
+    time for the watchdog lane.  Composable with :class:`SimCollectives`
+    and :class:`CountingCollectives`; injected events are recorded into
+    the same :class:`CommTrace` (``fault:kill`` / ``fault:delay``
+    pseudo-primitives carrying the target PE, axis and phase tag), which
+    is what lets the fault tests assert *where* a fault fired and that the
+    rescaled re-run followed (see ``psort(fault_policy=...)`` in
+    ``core/api.py``).
+
   * :class:`NestedCollectives` — a decorator *view*: presents one virtual
     flat axis over an ``(outer, inner)`` pair of real named axes (a
     hierarchical inter-host × intra-host mesh) and decomposes every
@@ -51,7 +65,7 @@ import contextlib
 import contextvars
 import dataclasses
 import os
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,12 +161,21 @@ def _payload_bytes(x) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class CommEvent:
-    """One collective launch as seen at the call site (per PE)."""
+    """One collective launch as seen at the call site (per PE).
+
+    ``primitive`` is one of the four collectives for regular launches;
+    fault-lane records use the pseudo-primitives ``fault:kill`` /
+    ``fault:delay`` (:class:`FaultyCollectives`) and ``rescale`` (the
+    ``psort`` fault driver, with ``group_size`` = the post-rescale p).
+    ``pe`` identifies the PE an injected event targeted (regular launches
+    leave it ``None`` — the trace is per-PE already).
+    """
     primitive: str                    # ppermute | psum | all_gather | all_to_all
     bytes: int                        # payload bytes moved per PE (input side)
     group_size: Optional[int] = None  # participants; None = the full axis
     axis: Optional[str] = None        # mesh axis the launch targeted
     tag: Optional[str] = None         # algorithm phase (see :func:`tagged`)
+    pe: Optional[int] = None          # target PE of an injected fault event
 
 
 class CommTrace:
@@ -175,9 +198,9 @@ class CommTrace:
 
     def add(self, primitive: str, nbytes: int,
             group_size: Optional[int] = None, axis: Optional[str] = None,
-            tag: Optional[str] = None):
+            tag: Optional[str] = None, pe: Optional[int] = None):
         self.events.append(CommEvent(primitive, int(nbytes), group_size,
-                                     axis, tag))
+                                     axis, tag, pe))
 
     # -- aggregation ------------------------------------------------------
 
@@ -193,9 +216,17 @@ class CommTrace:
             out[e.primitive] = out.get(e.primitive, 0) + e.bytes
         return out
 
+    PRIMITIVES = ("ppermute", "psum", "all_gather", "all_to_all")
+
+    def injected(self) -> List[CommEvent]:
+        """Injected fault-lane records (``fault:*`` / ``rescale``) — kept
+        out of every launch/byte aggregate so a faulted trace still fits
+        the cost model; the fault tests read them directly."""
+        return [e for e in self.events if e.primitive not in self.PRIMITIVES]
+
     @property
     def launches(self) -> int:
-        return len(self.events)
+        return sum(1 for e in self.events if e.primitive in self.PRIMITIVES)
 
     @property
     def p2p_launches(self) -> int:
@@ -205,13 +236,15 @@ class CommTrace:
     @property
     def fused_launches(self) -> int:
         """Hardware-routed fused collectives — the α_c term."""
-        return sum(1 for e in self.events if e.primitive != "ppermute")
+        return self.launches - self.p2p_launches
 
     def fused_hops(self, p: int) -> float:
         """Σ over fused launches of the torus pipeline depth (group p)^⅓ —
         the α_hop term of the v5e-style model in ``core/selection.py``."""
         return float(sum((e.group_size or p) ** (1.0 / 3.0)
-                         for e in self.events if e.primitive != "ppermute"))
+                         for e in self.events
+                         if e.primitive in self.PRIMITIVES
+                         and e.primitive != "ppermute"))
 
     def wire_bytes(self) -> int:
         return sum(e.bytes for e in self.events)
@@ -359,6 +392,184 @@ def counting(inner: Optional[Collectives] = None):
     cc = CountingCollectives(inner if inner is not None else current())
     with use(cc):
         yield cc.trace
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: PEFailure + FaultPlan + FaultyCollectives
+# ---------------------------------------------------------------------------
+
+
+class PEFailure(RuntimeError):
+    """A (simulated) PE died mid-collective.
+
+    Raised **at trace time** by :class:`FaultyCollectives` when a planned
+    kill fires, aborting the traced computation the way a dead participant
+    aborts a fused collective for its whole group.  Carries the identity
+    the rescale path needs (``repro.runtime.elastic.plan_sort_rescale``):
+    the flat PE rank, the phase tag, and the primitive/axis of the launch
+    that observed the failure.  The ``psort`` fault driver also raises it
+    with ``phase="straggler"`` to route a watchdog-flagged PE down the
+    same exclude-and-rescale path.
+    """
+
+    def __init__(self, pe: int, phase: Optional[str] = None,
+                 primitive: Optional[str] = None, axis: Optional[str] = None):
+        self.pe = int(pe)
+        self.phase = phase
+        self.primitive = primitive
+        self.axis = axis
+        super().__init__(
+            f"PE {self.pe} failed during {primitive or 'collective'} "
+            f"(axis={axis!r}, phase={phase!r})")
+
+
+@dataclasses.dataclass(frozen=True)
+class PEFault:
+    """One planned fault: kill or delay PE ``pe``.
+
+    ``tag`` names the phase (:func:`tagged`) whose collectives trigger the
+    fault; ``None`` matches any phase, so the fault fires at the first
+    collective of the run.  ``after`` skips that many matching launches
+    first — the fault fires on the (``after`` + 1)-th.  ``factor`` is the
+    simulated step-time stretch of a ``delay`` fault, the straggler signal
+    ``repro.runtime.failures.flag_stragglers`` thresholds against
+    ``k_mad`` deviations.
+
+    PE indices are flat ranks in the topology of the attempt the fault
+    fires in; after a rescale the driver drops plans whose ``pe`` fell off
+    the shrunken mesh.
+    """
+
+    kind: str                       # "kill" | "delay"
+    pe: int
+    tag: Optional[str] = None       # phase tag to fire at; None = any
+    after: int = 0                  # matching launches to let pass first
+    factor: float = 4.0             # step-time stretch of a delay
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "delay"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+def kill_pe(pe: int, tag: Optional[str] = None, after: int = 0) -> PEFault:
+    """A fault that kills PE ``pe`` at phase ``tag``."""
+    return PEFault("kill", int(pe), tag, int(after))
+
+
+def delay_pe(pe: int, factor: float = 4.0, tag: Optional[str] = None,
+             after: int = 0) -> PEFault:
+    """A fault that stretches PE ``pe``'s simulated step time ×``factor``."""
+    return PEFault("delay", int(pe), tag, int(after), float(factor))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic set of :class:`PEFault` to execute during one run."""
+
+    faults: Tuple[PEFault, ...] = ()
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)
+
+    def surviving(self, pe: int, p_new: int) -> "FaultPlan":
+        """The plan after PE ``pe`` was excluded and the topology shrank
+        to ``p_new``: drop its faults and any targeting off-mesh ranks."""
+        return FaultPlan(tuple(f for f in self.faults
+                               if f.pe != pe and f.pe < p_new))
+
+
+class FaultyCollectives(Collectives):
+    """Decorator backend: forward to ``inner``, executing a ``FaultPlan``.
+
+    Mirrors :class:`CountingCollectives` — wraps any backend and checks
+    the plan on every collective launch at trace time.  A matching *kill*
+    records a ``fault:kill`` event and raises :class:`PEFailure`; a
+    matching *delay* records ``fault:delay`` and accumulates the stretch
+    factor in :attr:`fired_delays` (read by the ``psort`` fault driver to
+    synthesize per-PE step times for the watchdog lane).  Injected events
+    go to ``trace`` — defaulting to the wrapped backend's trace when it is
+    a :class:`CountingCollectives`, so one :class:`CommTrace` interleaves
+    the injected events with the regular launches per axis/tag.
+
+    Like :func:`counting`, the decorator acts while the body is *traced*:
+    a jit cache hit replays neither launches nor faults, so the fault lane
+    always executes under a fresh trace (``psort``'s driver jits each
+    attempt anew).
+    """
+
+    def __init__(self, inner: Collectives, plan: FaultPlan,
+                 trace: Optional[CommTrace] = None):
+        self.inner = inner
+        self.plan = plan if isinstance(plan, FaultPlan) \
+            else FaultPlan(tuple(plan))
+        if trace is None:
+            trace = getattr(inner, "trace", None)
+        self.trace = trace if trace is not None else CommTrace()
+        self.fired_delays: Dict[int, float] = {}
+        self._launches: Dict[PEFault, int] = {}
+        self._done: Set[PEFault] = set()
+        self.name = f"faulty({inner.name})"
+
+    def _inject(self, primitive: str, axis_name) -> None:
+        tag = _TAG.get()
+        pending = [f for f in self.plan.faults if f not in self._done
+                   and (f.tag is None or f.tag == tag)]
+        # kills outrank delays within one launch: the PE dies before its
+        # slowdown could be observed
+        for f in sorted(pending, key=lambda f: f.kind != "kill"):
+            seen = self._launches.get(f, 0) + 1
+            self._launches[f] = seen
+            if seen <= f.after:
+                continue
+            self._done.add(f)
+            if f.kind == "kill":
+                self.trace.add("fault:kill", 0, axis=str(axis_name),
+                               tag=tag, pe=f.pe)
+                raise PEFailure(f.pe, phase=tag, primitive=primitive,
+                                axis=str(axis_name))
+            self.trace.add("fault:delay", 0, axis=str(axis_name),
+                           tag=tag, pe=f.pe)
+            self.fired_delays[f.pe] = max(self.fired_delays.get(f.pe, 1.0),
+                                          f.factor)
+
+    def axis_index(self, axis_name):
+        return self.inner.axis_index(axis_name)       # not a communication
+
+    def ppermute(self, x, axis_name, perm):
+        self._inject("ppermute", axis_name)
+        return self.inner.ppermute(x, axis_name, perm)
+
+    def psum(self, x, axis_name, axis_index_groups=None):
+        self._inject("psum", axis_name)
+        return self.inner.psum(x, axis_name,
+                               axis_index_groups=axis_index_groups)
+
+    def all_gather(self, x, axis_name, axis_index_groups=None, tiled=False):
+        self._inject("all_gather", axis_name)
+        return self.inner.all_gather(x, axis_name,
+                                     axis_index_groups=axis_index_groups,
+                                     tiled=tiled)
+
+    def all_to_all(self, x, axis_name, split_axis=0, concat_axis=0,
+                   axis_index_groups=None, tiled=False):
+        self._inject("all_to_all", axis_name)
+        return self.inner.all_to_all(x, axis_name, split_axis=split_axis,
+                                     concat_axis=concat_axis,
+                                     axis_index_groups=axis_index_groups,
+                                     tiled=tiled)
+
+
+@contextlib.contextmanager
+def faulty(plan: FaultPlan, inner: Optional[Collectives] = None):
+    """Scope a :class:`FaultyCollectives` over ``inner`` (default: the
+    current backend); yields the decorator so the caller can read
+    :attr:`FaultyCollectives.fired_delays` afterwards.  Must wrap
+    *tracing*, exactly like :func:`counting` — and like a ``counting()``
+    scope it survives entry into :func:`sim_map`, which re-wraps its sim
+    backend with the same plan state."""
+    fc = FaultyCollectives(inner if inner is not None else current(), plan)
+    with use(fc):
+        yield fc
 
 
 # ---------------------------------------------------------------------------
@@ -906,6 +1117,14 @@ def sim_map(body, axis_name: str, p: Optional[int] = None,
             return cur
         if isinstance(cur, CountingCollectives):
             return CountingCollectives(_resolve(cur.inner), cur.trace)
+        if isinstance(cur, FaultyCollectives):
+            fc = FaultyCollectives(_resolve(cur.inner), cur.plan, cur.trace)
+            # share mutable fault state so the ambient decorator observes
+            # what fired inside the sim run
+            fc.fired_delays = cur.fired_delays
+            fc._launches = cur._launches
+            fc._done = cur._done
+            return fc
         return SIM
 
     if nested is not None:

@@ -254,6 +254,12 @@ def select_algorithm(n: int, p: int,
     with measured constants.  ``levels`` / ``mesh_shape`` parameterize the
     RAMS candidate the way :func:`repro.core.api.psort` would run it
     (nested meshes charge slow-axis constants for the outer level only).
+
+    Selection is a pure function of (n, p, model), so the fault-tolerant
+    ``psort(..., fault_policy=...)`` driver re-consults it after every
+    exclude-and-rescale: shrinking p moves the (n, p) point across the
+    regime map, and a sort that started as e.g. RAMS at large p may
+    legitimately restart as RQuick at the reduced extent.
     """
     m = model if model is not None else DEFAULT_MODEL
     cands = dict(COSTS)

@@ -31,7 +31,7 @@ def sort_mesh(p: Optional[int] = None, d: int = 1, *, axis: str = "sort",
               data_axis: str = "data",
               shape: Optional[Tuple[int, int]] = None,
               mesh_axes: Tuple[str, str] = ("inter", "intra"),
-              devices=None) -> Mesh:
+              devices=None, exclude: Tuple[int, ...] = ()) -> Mesh:
     """A device mesh for ``psort``: flat (d, p) or hierarchical nested.
 
     Flat form (default): a (d, p) mesh with axes (``data_axis``, ``axis``)
@@ -48,12 +48,26 @@ def sort_mesh(p: Optional[int] = None, d: int = 1, *, axis: str = "sort",
     ``outer · p_inner + inner``, so enumerating the nested mesh in row-major
     order visits the same devices as the flat mesh of ``p_outer·p_inner``.
 
+    ``exclude`` drops devices by their *position* in the device list
+    before the mesh is laid out — the elastic rescale path
+    (``repro.runtime.elastic.plan_sort_rescale``): failed flat PE ranks
+    are excluded and the survivors renumber contiguously into the reduced
+    mesh (pass the plan's ``p_new``/``mesh_shape`` as ``p``/``shape``).
+    Axis *names* are unchanged, so every sharding rule re-derives.
+
     >>> import jax
     >>> m = sort_mesh(shape=(1, 1), devices=jax.devices()[:1])
     >>> [(a, m.shape[a]) for a in m.axis_names]
     [('inter', 1), ('intra', 1)]
     """
     devs = list(devices) if devices is not None else jax.devices()
+    if exclude:
+        bad = {int(i) for i in exclude}
+        out_of_range = bad - set(range(len(devs)))
+        if out_of_range:
+            raise ValueError(f"exclude={sorted(bad)} names device positions "
+                             f"outside 0..{len(devs) - 1}")
+        devs = [dv for i, dv in enumerate(devs) if i not in bad]
     if d < 1:
         raise ValueError(f"d={d} must be >= 1")
     if shape is not None:

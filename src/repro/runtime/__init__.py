@@ -1,2 +1,5 @@
 from .checkpoint import CheckpointManager            # noqa: F401
-from .failures import StepWatchdog, run_with_restarts  # noqa: F401
+from .elastic import (RescalePlan, SortRescalePlan, plan_rescale,  # noqa: F401
+                      plan_sort_rescale)
+from .failures import (FaultPolicy, StepWatchdog,    # noqa: F401
+                       flag_stragglers, run_with_restarts)

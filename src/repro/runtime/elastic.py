@@ -57,14 +57,83 @@ def plan_rescale(old_shape: Dict[str, int], n_chips: int, cfg,
         notes.append("pod axis collapsed to 1")
     data = rest // pod
     accum = 1
-    if global_batch % (pod * data) != 0:
-        accum = int(np.ceil((pod * data) / max(global_batch, 1)))
-        notes.append(f"grad accumulation ×{accum} (batch {global_batch} "
-                     f"∤ data extent {pod * data})")
+    unit = pod * data
+    if global_batch % unit != 0:
+        # smallest accum with global_batch % (unit·accum) == 0; when the
+        # data extent itself does not divide the batch no such accum
+        # exists, so pad the batch up to the next multiple of unit
+        # (per-chip microbatch of 1, effective batch unit·accum).
+        accum = next((a for a in range(1, max(1, global_batch // unit) + 1)
+                      if global_batch % (unit * a) == 0), None)
+        if accum is None:
+            accum = -(-global_batch // unit)       # ceil: pad, never shrink
+            notes.append(f"grad accumulation ×{accum} (batch {global_batch} "
+                         f"∤ data extent {unit}; padded to {unit * accum})")
+        else:
+            notes.append(f"grad accumulation ×{accum} (batch {global_batch} "
+                         f"∤ data extent {unit})")
     new = {"data": data, "model": model}
     if pod > 1:
         new = {"pod": pod, **new}
     return RescalePlan(dict(old_shape), new, accum, tuple(notes))
+
+
+@dataclasses.dataclass(frozen=True)
+class SortRescalePlan:
+    """Topology change for a sorting mesh after PE failures.
+
+    ``p_new`` is the largest power of two ≤ the survivor count — the
+    hypercube layout every sorting algorithm assumes (a p = 1024 sort that
+    loses one PE restarts at p = 512, where ``select_algorithm`` may pick
+    a different regime).  ``mesh_shape`` is the re-derived (outer, inner)
+    nested factorization when the old mesh was hierarchical: the inner
+    (intra-host) extent is preserved while it still fits, the outer axis
+    absorbs the shrink — axis *names* are unchanged, so the sharding rules
+    and ``sort_mesh(..., exclude=failed)`` re-derive the device mesh
+    without touching algorithm code.
+    """
+
+    p_old: int
+    failed: Tuple[int, ...]
+    p_new: int
+    mesh_shape: Optional[Tuple[int, int]]
+    notes: Tuple[str, ...]
+
+    @property
+    def survivors(self) -> int:
+        return self.p_old - len(self.failed)
+
+
+def plan_sort_rescale(p_old: int, failed,
+                      mesh_shape: Optional[Tuple[int, int]] = None
+                      ) -> SortRescalePlan:
+    """Plan the sort-mesh topology after excluding ``failed`` PE ranks.
+
+    The sorting analogue of :func:`plan_rescale`: given the old axis
+    extent (or nested ``mesh_shape``) and the flat ranks of the
+    dead/straggling PEs, derive the reduced power-of-two extent the sort
+    re-runs at.  Raises ``ValueError`` when no usable topology survives.
+    """
+    failed = tuple(sorted({int(f) for f in failed if 0 <= int(f) < p_old}))
+    alive = p_old - len(failed)
+    if alive < 1:
+        raise ValueError(f"no surviving PEs (p={p_old}, failed={failed})")
+    p_new = 1 << (alive.bit_length() - 1)          # largest pow2 ≤ alive
+    notes = []
+    if p_new != alive:
+        notes.append(f"{alive} survivors rounded down to p={p_new} "
+                     f"(hypercube layout)")
+    new_shape = None
+    if mesh_shape is not None:
+        p_o, p_i = (int(v) for v in mesh_shape)
+        p_i_new = min(p_i, p_new)
+        p_o_new = p_new // p_i_new
+        new_shape = (p_o_new, p_i_new)
+        if new_shape != (p_o, p_i):
+            notes.append(f"nested mesh {(p_o, p_i)} → {new_shape} "
+                         f"(inner axis preserved while it fits)")
+    return SortRescalePlan(int(p_old), failed, int(p_new), new_shape,
+                           tuple(notes))
 
 
 def _model_divides(cfg, m: int) -> bool:

@@ -14,6 +14,9 @@ their gather buffers would blow past memory (see ``repro.core.comm``).
 Markers: ``slow`` tags the long-tail matrix tests; the default lane
 excludes them (``addopts`` in pyproject.toml), so the tier-1 command
 ``pytest -x -q`` stays fast.  Run ``pytest -m slow`` for the full matrix.
+``faults`` tags the fault-injection lane (tests/test_faults.py): CI runs
+the small-p slice in the fast job (``-m "faults and not slow"``) and the
+full algorithm × distribution fault matrix nightly (``-m slow``).
 """
 import os
 
@@ -27,6 +30,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running matrix/scaling tests (excluded from "
         "the default fast lane; run with -m slow)")
+    config.addinivalue_line(
+        "markers", "faults: fault-injection lane (kill/delay/rescale); the "
+        "fast CI slice runs -m 'faults and not slow'")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,232 @@
+"""Fault-injection lane: psort under killed and straggling PEs.
+
+The tentpole contract (ISSUE 6 / ROADMAP "elastic"): with a
+``FaultPolicy``, a sim-backend ``psort`` that loses PEs mid-run — a
+planned kill raising :class:`repro.core.comm.PEFailure` at trace time, or
+a delayed PE flagged by the ``StepWatchdog`` straggler lane — excludes
+them, re-plans the topology (``plan_sort_rescale``: survivors rounded
+down to a power of two), redistributes the input and re-runs, bounded by
+``run_with_restarts``.  The output must be the globally sorted **exact
+multiset** of the input, and the recorded ``CommTrace`` must interleave
+the injected ``fault:*`` events and ``rescale`` markers with the regular
+launches.
+
+Lanes: every test here carries ``@pytest.mark.faults``; the fast slice
+(p ≤ 8, Uniform) runs in tier-1 and the fast CI job via
+``-m "faults and not slow"``; the full 7-algorithm × distribution matrix
+at p = 16 is ``slow`` and runs nightly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core.api import psort
+from repro.core.comm import FaultPlan, delay_pe, kill_pe
+from repro.data.distributions import generate_instance
+from repro.runtime.failures import FaultPolicy
+
+from helpers import check_sort
+
+pytestmark = pytest.mark.faults
+
+ALGOS = ["gatherm", "allgatherm", "rfis", "rquick", "rams", "bitonic",
+         "ssort"]
+DISTS = ["Uniform", "Zero", "DeterDupl"]
+# classical sample sort overflows on heavy duplicates by design (paper
+# §VII-B) — rescaling cannot fix a robustness gap, so those cells are
+# excluded from the fault matrix exactly as in test_sorting.py
+NON_ROBUST = {("ssort", "Zero"), ("ssort", "DeterDupl")}
+
+
+def _policy(*faults, **kw):
+    return FaultPolicy(plan=FaultPlan(tuple(faults)), **kw)
+
+
+def _assert_fault_run(info, p0, *, kills=0, delays=0, rescales=1):
+    """The CommTrace/attempt evidence of an exclude-and-rescale run."""
+    tr = info["comm_trace"]
+    prims = [e.primitive for e in tr.injected()]
+    assert prims.count("fault:kill") == kills
+    assert prims.count("fault:delay") >= delays   # a delay may re-fire on retry
+    marks = [e for e in tr.injected() if e.primitive == "rescale"]
+    assert len(marks) == rescales
+    assert all(m.group_size < p0 for m in marks)  # re-run at reduced p
+    assert info["fault"]["p_final"] == marks[-1].group_size
+    assert info["fault"]["restarts"] == rescales
+    assert tr.launches > 0                        # regular launches interleaved
+    ps = [a["p"] for a in info["fault"]["attempts"]]
+    assert ps[0] == p0 and sorted(ps, reverse=True) == ps
+    assert info["fault"]["attempts"][-1]["ok"]
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_kill_and_straggler_every_algorithm(algorithm):
+    """Acceptance: 1 killed + 1 straggling PE, every algorithm — sorted
+    output, exact multiset, rescaled re-runs recorded."""
+    p = 8
+    x = generate_instance("Uniform", p, 32 * p).astype(np.int32)
+    pol = _policy(kill_pe(2), delay_pe(1, factor=8.0))
+    info = check_sort(x, p, algorithm, backend="sim", fault_policy=pol)
+    _assert_fault_run(info, p, kills=1, delays=1, rescales=2)
+    assert info["fault"]["failed"] == (2, 1)
+    assert [a["p"] for a in pol.attempts] == [8, 4, 2]
+
+
+def test_single_kill_rescale_semantics():
+    p = 8
+    x = generate_instance("Uniform", p, 64 * p).astype(np.int32)
+    pol = _policy(kill_pe(3, tag="shuffle"))
+    info = check_sort(x, p, "rams", backend="sim", fault_policy=pol)
+    _assert_fault_run(info, p, kills=1, rescales=1)
+    kill = next(e for e in pol.trace.injected()
+                if e.primitive == "fault:kill")
+    assert kill.pe == 3 and kill.tag == "shuffle"
+    rescale = next(e for e in pol.trace.injected()
+                   if e.primitive == "rescale")
+    assert rescale.pe == 3 and rescale.group_size == 4   # 7 survivors → 4
+
+
+def test_straggler_only_excluded_via_watchdog():
+    p = 8
+    x = generate_instance("Uniform", p, 32 * p).astype(np.int32)
+    pol = _policy(delay_pe(5, factor=16.0))
+    info = check_sort(x, p, "rquick", backend="sim", fault_policy=pol)
+    _assert_fault_run(info, p, delays=1, rescales=1)
+    rescale = next(e for e in pol.trace.injected()
+                   if e.primitive == "rescale")
+    assert rescale.pe == 5 and rescale.tag == "straggler"
+
+
+def test_mild_delay_below_threshold_is_not_a_straggler():
+    """A delay under the k_mad/1.5× gates completes in one attempt."""
+    p = 8
+    x = generate_instance("Uniform", p, 16 * p).astype(np.int32)
+    pol = _policy(delay_pe(2, factor=1.2))
+    check_sort(x, p, "rquick", backend="sim", fault_policy=pol)
+    assert len(pol.attempts) == 1 and pol.attempts[0]["ok"]
+    assert not [e for e in pol.trace.injected()
+                if e.primitive == "rescale"]
+
+
+def test_two_kills_two_rescales():
+    p = 8
+    x = generate_instance("Uniform", p, 32 * p).astype(np.int32)
+    pol = _policy(kill_pe(6), kill_pe(1, after=2))
+    info = check_sort(x, p, "rfis", backend="sim", fault_policy=pol)
+    _assert_fault_run(info, p, kills=2, rescales=2)
+    assert [a["p"] for a in pol.attempts] == [8, 4, 2]
+
+
+def test_nested_mesh_kill_preserves_inner_axis():
+    x = generate_instance("Uniform", 8, 64 * 8).astype(np.int32)
+    pol = _policy(kill_pe(5))
+    out, info = psort(x, mesh_shape=(2, 4), algorithm="rams", backend="sim",
+                      fault_policy=pol, return_info=True)
+    assert (np.asarray(out) == np.sort(x)).all()
+    assert [a["mesh_shape"] for a in pol.attempts] == [(2, 4), (1, 4)]
+    assert info["mesh_shape"] == (1, 4)
+
+
+def test_batched_rows_survive_fault():
+    """2-D keys: every row of the batch re-sorts on the rescaled mesh."""
+    p = 4
+    r = np.random.default_rng(3)
+    xs = r.integers(0, 1 << 20, size=(3, 16 * p)).astype(np.int32)
+    pol = _policy(kill_pe(1))
+    out, info = psort(xs, p=p, algorithm="rquick", backend="sim",
+                      fault_policy=pol, return_info=True)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(xs, axis=-1))
+    assert info["fault"]["p_final"] == 2
+
+
+def test_auto_reconsults_selection_at_reduced_p():
+    p = 8
+    x = generate_instance("Uniform", p, 64 * p).astype(np.int32)
+    pol = _policy(kill_pe(0))
+    info = check_sort(x, p, "auto", backend="sim", fault_policy=pol)
+    algos = [a["algorithm"] for a in pol.attempts]
+    assert all(a in ALGOS + ["ntb-quick", "ntb-ams"] for a in algos)
+    assert info["algorithm"] == algos[-1]
+
+
+def test_restart_budget_exhausted_reraises():
+    p = 4
+    x = np.arange(64, dtype=np.int32)
+    pol = _policy(kill_pe(0), kill_pe(1), max_restarts=1)
+    with pytest.raises(comm.PEFailure):
+        psort(x, p=p, algorithm="rquick", backend="sim", fault_policy=pol)
+
+
+def test_fault_policy_requires_sim_backend():
+    pol = _policy(kill_pe(0))
+    with pytest.raises(ValueError, match="sim"):
+        psort(np.arange(8, dtype=np.int32), p=2, algorithm="rquick",
+              backend="shard_map", fault_policy=pol)
+
+
+def test_injected_events_excluded_from_launch_stats():
+    """fault:*/rescale pseudo-events must not pollute the cost-model
+    aggregates (launches / wire bytes) the calibrator fits against."""
+    p = 4
+    x = np.arange(128, dtype=np.int32)
+    pol = _policy(kill_pe(2))
+    psort(x, p=p, algorithm="rquick", backend="sim", fault_policy=pol)
+    tr = pol.trace
+    assert len(tr.injected()) == 2                  # kill + rescale
+    assert tr.launches == len(tr.events) - 2
+    assert all(e.primitive in tr.PRIMITIVES or e.bytes == 0
+               for e in tr.events)
+
+
+def test_sort_mesh_exclude_rederives_reduced_mesh():
+    """Device-mesh side of the rescale path: failed device positions are
+    excluded and the survivors renumber into the reduced mesh."""
+    import jax
+    from repro.dist.sharding import sort_mesh
+    devs = jax.devices()                       # 8 emulated CPU devices
+    m = sort_mesh(p=4, devices=devs[:5], exclude=(2,))
+    assert dict(m.shape) == {"data": 1, "sort": 4}
+    assert devs[2] not in list(m.devices.ravel())
+    m2 = sort_mesh(shape=(2, 2), devices=devs[:6], exclude=(1, 3))
+    assert dict(m2.shape) == {"inter": 2, "intra": 2}
+    assert not {devs[1], devs[3]} & set(m2.devices.ravel())
+    with pytest.raises(ValueError, match="exclude"):
+        sort_mesh(p=2, devices=devs[:2], exclude=(7,))
+
+
+def test_empty_plan_single_attempt():
+    x = np.arange(64, dtype=np.int32)
+    pol = FaultPolicy()
+    info = check_sort(x, 4, "bitonic", backend="sim", fault_policy=pol)
+    assert len(pol.attempts) == 1
+    assert info["fault"]["p_final"] == 4 and not info["fault"]["failed"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("instance", DISTS)
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_fault_matrix_full(algorithm, instance):
+    """Nightly: 2 kills + 1 straggler at p = 16, all algorithms × the
+    robustness distributions — sorted exact multiset at p_final = 2."""
+    if (algorithm, instance) in NON_ROBUST:
+        pytest.skip("classical sample sort is non-robust on heavy "
+                    "duplicates by design (paper §VII-B)")
+    p = 16
+    x = generate_instance(instance, p, 64 * p).astype(np.int32)
+    pol = _policy(kill_pe(3), kill_pe(5, after=2), delay_pe(1, factor=8.0))
+    info = check_sort(x, p, algorithm, backend="sim", fault_policy=pol)
+    _assert_fault_run(info, p, kills=2, delays=1, rescales=3)
+    assert [a["p"] for a in pol.attempts] == [16, 8, 4, 2]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["rams", "rquick", "bitonic"])
+def test_fault_matrix_nested(algorithm):
+    """Nightly: kill + straggler on a hierarchical (4, 4) mesh."""
+    x = generate_instance("DeterDupl", 16, 64 * 16).astype(np.int32)
+    pol = _policy(kill_pe(9), delay_pe(2, factor=8.0))
+    out, info = psort(x, mesh_shape=(4, 4), algorithm=algorithm,
+                      backend="sim", fault_policy=pol, return_info=True)
+    assert (np.asarray(out) == np.sort(x)).all()
+    _assert_fault_run(info, 16, kills=1, delays=1, rescales=2)
+    assert [a["mesh_shape"] for a in pol.attempts] == [(4, 4), (2, 4), (1, 4)]

@@ -62,6 +62,20 @@ def test_merge_shards_preserves_multiset(n, seed):
     assert (got == np.sort(np.concatenate([a, b]))).all()
 
 
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=1e-6, max_value=1e6, allow_nan=False,
+                 allow_infinity=False),
+       st.integers(1, 250), st.integers(1, 20), st.floats(1.0, 20.0))
+def test_watchdog_never_flags_constant_stream(dt, n, warmup, k_mad):
+    """A perfectly steady step-time stream must never look like a
+    straggler, for any stream length / warmup / threshold."""
+    from repro.runtime.failures import StepWatchdog
+    wd = StepWatchdog(k_mad=k_mad, warmup=warmup)
+    for i in range(n):
+        assert not wd.observe(i, dt)
+    assert wd.flagged == []
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(2, 200), st.integers(0, 10**9))
 def test_median_estimator_quality(n, seed):

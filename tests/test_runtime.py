@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.failures import StepWatchdog, run_with_restarts
+from repro.runtime.failures import (StepWatchdog, flag_stragglers,
+                                    run_with_restarts)
 
 
 def _state(v=0.0):
@@ -103,6 +104,55 @@ def test_watchdog_flags_stragglers():
     assert wd.flagged == [20]
 
 
+def test_watchdog_stop_without_start_raises():
+    """Regression: stop() before start() used to TypeError on None - t0."""
+    wd = StepWatchdog()
+    with pytest.raises(RuntimeError, match="start"):
+        wd.stop(0)
+    # and stop() consumes the start: a second stop raises again
+    wd.start()
+    wd.stop(0, now=wd._t0 + 0.1)
+    with pytest.raises(RuntimeError, match="start"):
+        wd.stop(1)
+
+
+def test_watchdog_warmup_boundary():
+    """Exactly ``warmup`` history entries is the first flaggable step."""
+    wd = StepWatchdog(k_mad=6.0, warmup=5)
+    for i in range(5):                   # history 0..4 entries: never flags
+        assert not wd.observe(i, 0.1)
+    # exactly 5 entries of history now — a 100× outlier must flag
+    assert wd.observe(5, 10.0)
+    assert wd.flagged == [5]
+    # boundary from below: a fresh watchdog with warmup-1 history ignores
+    # the same outlier
+    wd2 = StepWatchdog(k_mad=6.0, warmup=5)
+    for i in range(4):
+        wd2.observe(i, 0.1)
+    assert not wd2.observe(4, 10.0)
+
+
+def test_watchdog_window_is_100_entries():
+    """The estimate tracks the last 100 steps only: after 100+ slow steps
+    the old fast regime has scrolled out and slow is the new normal."""
+    wd = StepWatchdog(k_mad=6.0, warmup=5)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert wd.observe(10, 10.0)          # slow vs fast history: flags
+    for i in range(11, 115):
+        wd.observe(i, 10.0)              # regime change
+    assert len(wd.times) > 100
+    assert not wd.observe(115, 10.0)     # window refilled: no longer flags
+
+
+def test_flag_stragglers_one_round():
+    times = [1.0] * 8
+    times[3] = 8.0
+    assert flag_stragglers(times) == [3]
+    assert flag_stragglers([1.0] * 8) == []
+    assert flag_stragglers([]) == []
+
+
 def test_run_with_restarts_gives_up(tmp_path):
     mgr = CheckpointManager(tmp_path)
 
@@ -112,6 +162,68 @@ def test_run_with_restarts_gives_up(tmp_path):
     with pytest.raises(RuntimeError):
         run_with_restarts(always_fail, ckpt_manager=mgr, max_restarts=2,
                           logger=lambda *a: None)
+
+
+def test_run_with_restarts_no_progress_gives_up_early(tmp_path):
+    """A crash that never advances the checkpoint must not burn the whole
+    restart budget replaying itself — and the give-up log line must not be
+    another 'restart N/max'."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, _state())                # progress frozen at step 5
+    lines, calls = [], []
+
+    def always_fail(start):
+        calls.append(start)
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(always_fail, ckpt_manager=mgr, max_restarts=10,
+                          logger=lines.append)
+    assert len(calls) == 2               # initial try + one retry, not 11
+    assert "no progress" in lines[-1]
+    assert "restart" not in lines[-1].replace("restarts", "")
+
+
+def test_run_with_restarts_final_raise_not_logged_as_restart():
+    lines = []
+
+    def always_fail(start):
+        raise ValueError("boom")
+
+    with pytest.raises(ValueError):
+        run_with_restarts(always_fail, max_restarts=2, logger=lines.append,
+                          progress_fn=None)
+    assert "giving up after 2" in lines[-1]
+    assert sum("restart " in ln for ln in lines) == 2   # only real retries
+
+
+def test_run_with_restarts_retry_on_filters():
+    """Exceptions outside retry_on propagate without any retry."""
+    calls = []
+
+    def fail(start):
+        calls.append(start)
+        raise KeyError("boom")
+
+    with pytest.raises(KeyError):
+        run_with_restarts(fail, max_restarts=5, retry_on=(ValueError,),
+                          logger=lambda *a: None)
+    assert len(calls) == 1
+
+
+def test_run_with_restarts_recovers_with_progress():
+    """Progress between failures keeps the retry loop alive."""
+    state = {"step": 0}
+
+    def fn(start):
+        state["step"] += 1
+        if state["step"] < 3:
+            raise RuntimeError("boom")
+        return "done"
+
+    out = run_with_restarts(fn, max_restarts=5, logger=lambda *a: None,
+                            progress_fn=lambda: state["step"])
+    assert out == "done" and state["step"] == 3
 
 
 def test_grad_compression_error_feedback():
@@ -238,13 +350,44 @@ def test_elastic_rescale_plan():
     # grow 256 → 512 chips keeping model extent
     p = plan_rescale({"data": 16, "model": 16}, 512, cfg, global_batch=256)
     assert p.n_chips == 512 and p.new_shape["model"] == 16
+    assert p.grad_accum == 1             # 256 % 32 == 0: no accumulation
     # shrink to 24 chips: model must divide arch dims (17408, 5120)
     p2 = plan_rescale({"data": 16, "model": 16}, 24, cfg, global_batch=256)
     assert p2.n_chips == 24
     assert cfg.d_ff % p2.new_shape["model"] == 0
+    # regression: data extent 3 does not divide 256 — the old formula
+    # reported accum=1; the plan must pad up to the next multiple of 3
+    assert p2.grad_accum == -(-256 // (p2.new_shape["data"] *
+                                       p2.new_shape.get("pod", 1)))
+    assert p2.grad_accum > 1
+    assert any("accum" in nt for nt in p2.notes)
     # degenerate: 1 chip
     p3 = plan_rescale({"data": 16, "model": 16}, 1, cfg, global_batch=256)
     assert p3.new_shape == {"data": 1, "model": 1}
+    assert p3.grad_accum == 1            # 256 % 1 == 0
+
+
+def test_plan_sort_rescale():
+    from repro.runtime.elastic import plan_sort_rescale
+
+    # one failure: survivors rounded down to the next power of two
+    r = plan_sort_rescale(8, [2])
+    assert (r.p_new, r.survivors, r.failed) == (4, 7, (2,))
+    # two failures at p=16 → 14 survivors → p=8
+    r2 = plan_sort_rescale(16, (3, 9))
+    assert r2.p_new == 8
+    # exact power of two survivor count is kept
+    r3 = plan_sort_rescale(8, [0, 1, 2, 3])
+    assert r3.p_new == 4
+    # nested: inner extent preserved while it fits, outer absorbs the cut
+    r4 = plan_sort_rescale(16, [5], mesh_shape=(4, 4))
+    assert r4.p_new == 8 and r4.mesh_shape == (2, 4)
+    r5 = plan_sort_rescale(4, [0, 1, 3], mesh_shape=(2, 2))
+    assert r5.p_new == 1 and r5.mesh_shape == (1, 1)
+    # out-of-range / duplicate ranks are ignored
+    assert plan_sort_rescale(8, [2, 2, 99]).p_new == 4
+    with pytest.raises(ValueError):
+        plan_sort_rescale(2, [0, 1])
 
 
 def test_elastic_rescale_state_roundtrip(tmp_path):
