@@ -39,6 +39,7 @@ from . import comm
 from .hypercube import (_alltoall_route, alltoall_shuffle, subcube_groups,
                         subcube_prefix_sum)
 from .types import SortShard, local_sort, resize
+from repro.kernels.partition import partition_ref as partition_buckets
 
 _PE_BITS = 12
 _POS_BITS = 20
@@ -232,19 +233,25 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
     # --- 3. select splitters, classify -------------------------------------
     q = (jnp.arange(1, nb, dtype=jnp.int64) * n_valid) // nb
     splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]   # (nb-1,)
+    # fused SSSS classify + histogram + stable in-bucket rank.  Element
+    # composites never materialize as u64: the (key, tag) planes compare
+    # lexicographically, which equals the u64 compare since the tag is
+    # exactly 32 bits.  Invalid entries (flat index ≥ count — pads sit at
+    # the tail of a locally-sorted shard) go to the trash bucket nb.
     elem_pos = jnp.arange(cap, dtype=jnp.int32)
-    elem = _composite(shard.keys, jnp.broadcast_to(sub_rel, (cap,)),
-                      elem_pos, shard.valid_mask())
-    if not tie_break:
-        elem = jnp.where(elem == _HI64, elem,
-                         elem & ~np.uint64((1 << (_PE_BITS + _POS_BITS)) - 1))
-    # SSSS classifier (kernels/kway jnp path): bucket = #splitters ≤ elem
-    bucket = jnp.sum(splitters[None, :] <= elem[:, None], axis=1).astype(jnp.int32)
-    bucket = jnp.where(shard.valid_mask(), bucket, nb)
+    if tie_break:
+        e_ties = _mix32((jnp.broadcast_to(sub_rel, (cap,)).astype(jnp.uint32)
+                         << np.uint32(_POS_BITS))
+                        | elem_pos.astype(jnp.uint32))
+    else:
+        e_ties = jnp.zeros((cap,), jnp.uint32)
+    s_keys = (splitters >> np.uint64(_PE_BITS + _POS_BITS)).astype(jnp.uint32)
+    s_ties = splitters.astype(jnp.uint32)            # low 32 bits
+    bucket, q_in_bucket, hist = partition_buckets(
+        shard.keys, e_ties, s_keys, s_ties, n_buckets=nb, count=shard.count)
 
-    # --- 4. histogram, psum, greedy contiguous group assignment ------------
-    hist = jnp.sum(bucket[:, None] == jnp.arange(nb)[None, :], axis=0
-                   ).astype(jnp.int64)                              # (nb,)
+    # --- 4. histogram psum, greedy contiguous group assignment -------------
+    hist = hist.astype(jnp.int64)                                   # (nb,)
     my_prefix, totals = subcube_prefix_sum(hist, axis_name, p, sub_dims)
     total = jnp.sum(totals)
     cum = jnp.cumsum(totals)
@@ -255,10 +262,7 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
     cum_grp = jnp.cumsum(group_total) - group_total                # before grp
 
     # --- 5. per-element target PE (perfect balance within groups) ----------
-    # local position within my bucket (data is locally sorted ⇒ contiguous)
-    onehot = bucket[:, None] == jnp.arange(nb)[None, :]
-    q_in_bucket = jnp.sum(jnp.where(onehot, jnp.cumsum(onehot, axis=0) - 1, 0),
-                          axis=1).astype(jnp.int64)
+    q_in_bucket = q_in_bucket.astype(jnp.int64)
     bsafe = jnp.clip(bucket, 0, nb - 1)
     g_e = g_of_bucket[bsafe]
     pos_in_group = (cum_before[bsafe] - cum_grp[g_e]

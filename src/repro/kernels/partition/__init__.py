@@ -1,0 +1,7 @@
+"""Fused partition-into-buckets: splitter classification + per-bucket
+histogram + stable in-bucket rank in one pass over a locally-sorted shard —
+the (bucket, send_pos, hist) triple every all_to_all-based algorithm needs.
+
+``partition_ref`` (ref.py) is the jnp contract; the Pallas TPU kernel lives
+in partition.py with the dispatcher in ops.py."""
+from .ref import partition_ref  # noqa: F401

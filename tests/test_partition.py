@@ -1,0 +1,180 @@
+"""Differential tests for the fused partition-into-buckets primitive.
+
+Three implementations must agree bitwise everywhere:
+
+  * the pre-existing O(n·nb) one-hot formulation (kept here as a numpy
+    oracle — it's what ``rams._rams_level`` shipped before the rewrite);
+  * ``partition_ref`` — the jnp reference the sim backend runs;
+  * the Pallas kernel (interpret mode on CPU) behind ``partition_buckets``.
+
+Plus the structural guarantee the rewrite exists for: no O(n·nb)
+intermediate is materialized anywhere in a traced RAMS level.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core  # noqa: F401  — flips jax_enable_x64 on
+from repro.data.distributions import INSTANCES
+from repro.kernels.partition import partition_ref
+
+AXIS = "pe"
+
+
+# ---------------------------------------------------------------------------
+# the pre-existing path, as a numpy oracle
+# ---------------------------------------------------------------------------
+
+def onehot_oracle(keys, ties, s_keys, s_ties, *, n_buckets, count,
+                  inclusive=True):
+    """O(n·nb) one-hot classify/rank/histogram — the formulation the fused
+    primitive replaced (rams._rams_level pre-rewrite, kernels/kway ref)."""
+    elem = (keys.astype(np.uint64) << np.uint64(32)) | ties.astype(np.uint64)
+    spl = (s_keys.astype(np.uint64) << np.uint64(32)) | s_ties.astype(np.uint64)
+    cmp = spl[None, :] <= elem[:, None] if inclusive \
+        else spl[None, :] < elem[:, None]
+    bucket = cmp.sum(axis=1).astype(np.int32)
+    C = keys.shape[0]
+    bucket = np.where(np.arange(C) < count, bucket, np.int32(n_buckets))
+    onehot = bucket[:, None] == np.arange(n_buckets + 1)[None, :]
+    hist = onehot[:, :n_buckets].sum(axis=0).astype(np.int32)
+    pos = np.where(onehot, np.cumsum(onehot, axis=0) - 1, 0) \
+        .sum(axis=1).astype(np.int32)
+    return bucket, pos, hist
+
+
+def _mix(x):
+    x = x.astype(np.uint32)
+    x ^= x >> 16
+    x *= np.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    return x
+
+
+def _case(name, C, n_buckets, count, seed=0, tie=True):
+    """A locally-sorted (keys, ties) shard + quantile splitters, all u32."""
+    gen = INSTANCES[name]
+    raw = gen(3, 8, count, seed=seed).astype(np.uint32)
+    keys = np.full(C, 0xFFFFFFFF, np.uint32)
+    keys[:count] = np.sort(raw)
+    ties = _mix(np.arange(C, dtype=np.uint32)) if tie \
+        else np.zeros(C, np.uint32)
+    ties[count:] = 0xFFFFFFFF
+    rng = np.random.default_rng(seed + 1)
+    samp = rng.choice(raw, size=max(count, 1), replace=True) if count else \
+        np.zeros(1, np.uint32)
+    s_keys = np.sort(samp)[
+        np.minimum(np.arange(1, n_buckets) * len(samp) // n_buckets,
+                   len(samp) - 1)].astype(np.uint32)
+    s_ties = _mix(np.arange(n_buckets - 1, dtype=np.uint32)) if tie \
+        else np.zeros(n_buckets - 1, np.uint32)
+    # splitter composites must be nondecreasing under (key, tie) lex order
+    comp = (s_keys.astype(np.uint64) << np.uint64(32)) | s_ties
+    order = np.argsort(comp, kind="stable")
+    return keys, ties, s_keys[order], s_ties[order]
+
+
+REF_CASES = [
+    ("Uniform", 1024, 64, 1024), ("Uniform", 1000, 8, 777),
+    ("Zero", 1024, 64, 1024), ("Zero", 257, 16, 200),
+    ("DeterDupl", 512, 32, 512), ("RandDupl", 384, 64, 300),
+    ("Staggered", 2048, 128, 2048), ("Mirrored", 192, 2, 100),
+    ("Uniform", 256, 16, 0), ("Reverse", 130, 4, 130),
+]
+
+
+@pytest.mark.parametrize("name,C,nb,count", REF_CASES)
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_partition_ref_matches_onehot_oracle(name, C, nb, count, inclusive):
+    keys, ties, sk, st = _case(name, C, nb, count)
+    ob, op, oh = onehot_oracle(keys, ties, sk, st, n_buckets=nb, count=count,
+                               inclusive=inclusive)
+    rb, rp, rh = jax.jit(
+        lambda *a: partition_ref(*a, n_buckets=nb, count=count,
+                                 inclusive=inclusive)
+    )(keys, ties, sk, st)
+    np.testing.assert_array_equal(np.asarray(rb), ob)
+    np.testing.assert_array_equal(np.asarray(rh), oh)
+    assert int(rh.sum()) == count
+    # ranks: the oracle gives invalid elements rank 0 (they are in no real
+    # bucket); the fused primitive ranks them inside the trash bucket —
+    # compare valid entries, and check trash ranks are the stable 0..n-1
+    np.testing.assert_array_equal(np.asarray(rp)[:count], op[:count])
+    np.testing.assert_array_equal(np.asarray(rp)[count:],
+                                  np.arange(C - count, dtype=np.int32))
+
+
+def test_partition_ref_no_tie_plane():
+    keys, ties, sk, st = _case("DeterDupl", 512, 32, 512, tie=False)
+    ob, op, oh = onehot_oracle(keys, ties, sk, st, n_buckets=32, count=512)
+    rb, rp, rh = partition_ref(keys, ties, sk, st, n_buckets=32, count=512)
+    np.testing.assert_array_equal(np.asarray(rb), ob)
+    np.testing.assert_array_equal(np.asarray(rp), op)
+    np.testing.assert_array_equal(np.asarray(rh), oh)
+
+
+def test_partition_ref_want_pos_false():
+    keys, ties, sk, st = _case("Uniform", 512, 16, 400)
+    b1, p1, h1 = partition_ref(keys, ties, sk, st, n_buckets=16, count=400)
+    b2, p2, h2 = partition_ref(keys, ties, sk, st, n_buckets=16, count=400,
+                               want_pos=False)
+    assert p2 is None
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+# ---------------------------------------------------------------------------
+# structural: no O(n·nb) intermediate survives in a traced RAMS level
+# ---------------------------------------------------------------------------
+
+def _walk_eqns(jaxpr, fn):
+    for eqn in jaxpr.eqns:
+        fn(eqn)
+        for v in eqn.params.values():
+            _walk_param(v, fn)
+
+
+def _walk_param(v, fn):
+    if isinstance(v, (tuple, list)):
+        for x in v:
+            _walk_param(x, fn)
+    elif hasattr(v, "eqns"):               # Jaxpr
+        _walk_eqns(v, fn)
+    elif hasattr(v, "jaxpr"):              # ClosedJaxpr
+        _walk_eqns(v.jaxpr, fn)
+
+
+def test_rams_trace_free_of_onb_intermediates():
+    """Trace a full sim-backend RAMS sort at nb=64 and assert the largest
+    intermediate stays O(cap) per PE — the old one-hot path materialized
+    (2·cap, nb) = 8·16× over this test's threshold."""
+    from repro.core import comm
+    from repro.core.api import _sort_body
+
+    P, PER, CAP = 16, 512, 1024            # levels=1 at p=16 → nb = 4·16 = 64
+    body = _sort_body(AXIS, P, "rams", CAP, CAP, (("levels", 1),))
+    runner = comm.sim_map(body, AXIS, P)
+    keys2d = jax.ShapeDtypeStruct((P, PER), jnp.uint32)
+    counts = jax.ShapeDtypeStruct((P,), jnp.int32)
+    jaxpr = jax.make_jaxpr(runner)(keys2d, counts)
+
+    biggest = {"numel": 0, "eqn": None}
+
+    def look(eqn):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape:
+                numel = int(np.prod(shape))
+                if numel > biggest["numel"]:
+                    biggest["numel"] = numel
+                    biggest["eqn"] = str(eqn)[:200]
+
+    _walk_eqns(jaxpr.jaxpr, look)
+    # legit peak: the p·slot_cap shuffle buffer ≈ 2.9·cap per PE (×P for the
+    # vmapped sim axis). The old one-hot rank was 2·cap·nb = 128·cap per PE.
+    limit = P * CAP * 16
+    assert biggest["numel"] <= limit, (
+        f"O(n·nb)-sized intermediate back in the rams trace: "
+        f"{biggest['numel']} > {limit}\n{biggest['eqn']}")
