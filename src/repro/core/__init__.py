@@ -11,5 +11,6 @@ _jax.config.update("jax_enable_x64", True)
 
 from .api import psort, default_mesh          # noqa: E402,F401
 from .types import (SortShard, make_shard, merge_shards, local_sort,  # noqa: E402,F401
-                    key_to_uint, uint_to_key)
+                    key_to_uint, uint_to_key, LocalKernelPolicy,
+                    local_kernels, set_local_kernels)
 from .selection import select_algorithm       # noqa: E402,F401

@@ -43,8 +43,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.runtime.compat import shard_map
 
 from . import comm, selection
-from .types import (SortShard, key_to_uint, make_shard, pad_value,
-                    uint_to_key, use_pallas_local_sort)
+from .types import (SortShard, key_to_uint, local_kernels, make_shard,
+                    pad_value, uint_to_key)
 
 BACKENDS = ("shard_map", "sim")
 
@@ -405,10 +405,10 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     row_counts = jnp.minimum(jnp.maximum(n - per * jnp.arange(p), 0),
                              per).astype(jnp.int32)
     kw = tuple(sorted(algo_kw.items()))
-    # jit caches key on the Pallas local-sort flag: the flag is read at
+    # jit caches key on the local-kernel policy: the policy is read at
     # trace time, so without this a cached executable would silently
     # ignore a toggle between calls of the same signature.
-    pl = use_pallas_local_sort()
+    pl = local_kernels()
     if mesh_shape is not None:
         axes = ((mesh_axes[0], p_o), (mesh_axes[1], p_i))
         lead = (d,) if batched else ()

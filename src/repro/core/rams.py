@@ -39,7 +39,7 @@ from . import comm
 from .hypercube import (_alltoall_route, alltoall_shuffle, subcube_groups,
                         subcube_prefix_sum)
 from .types import SortShard, local_sort, resize
-from repro.kernels.partition import partition_ref as partition_buckets
+from repro.kernels.partition import partition_buckets
 
 _PE_BITS = 12
 _POS_BITS = 20

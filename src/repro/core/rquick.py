@@ -29,6 +29,7 @@ from . import comm
 from .hypercube import (butterfly_sum, exchange_shard, hypercube_shuffle)
 from .median import (butterfly_median_window, lift, splitter_from_window)
 from .types import SortShard, compact, local_sort, merge_shards, resize
+from repro.kernels.partition import partition_buckets
 
 
 class RQuickResult(NamedTuple):
@@ -43,14 +44,26 @@ def _split_point(shard: SortShard, splitter_lifted: jax.Array,
     With tie-breaking, x ∈ [0, m_eq] is chosen so |L| is closest to m/2.
     Without, all duplicates of the splitter go right (x = 0).
     """
-    lifted = jnp.where(shard.valid_mask(), lift(shard.keys),
-                       np.uint64(0xFFFFFFFFFFFFFFFF))
-    n_less = jnp.searchsorted(lifted, splitter_lifted, side="left").astype(jnp.int32)
-    n_leq = jnp.searchsorted(lifted, splitter_lifted, side="right").astype(jnp.int32)
-    n_less = jnp.minimum(n_less, shard.count)
-    n_leq = jnp.minimum(n_leq, shard.count)
+    # fused-partition classify against the single lifted splitter, as
+    # (hi, lo) u32 planes; bucket 0 of the inclusive pass holds the
+    # elements < s, of the strict pass the elements ≤ s — the histogram
+    # counts only valid elements, so no count-clamping is needed
+    lifted = lift(shard.keys)
+    e_hi = (lifted >> np.uint64(32)).astype(jnp.uint32)
+    e_lo = lifted.astype(jnp.uint32)
+    s_hi = jnp.reshape(splitter_lifted >> np.uint64(32), (1,)).astype(jnp.uint32)
+    s_lo = jnp.reshape(splitter_lifted, (1,)).astype(jnp.uint32)
+
+    def n_below(inclusive):
+        _, _, h = partition_buckets(e_hi, e_lo, s_hi, s_lo, n_buckets=2,
+                                    count=shard.count, inclusive=inclusive,
+                                    want_pos=False)
+        return h[0].astype(jnp.int32)
+
+    n_less = n_below(True)             # bucket 0 ⇔ elem < s
     if not tie_break:
         return n_less
+    n_leq = n_below(False)             # bucket 0 ⇔ elem ≤ s
     x = jnp.clip(shard.count // 2 - n_less, 0, n_leq - n_less)
     return n_less + x
 

@@ -22,6 +22,7 @@ import numpy as np
 from . import comm
 from .hypercube import _alltoall_route, alltoall_shuffle
 from .types import SortShard, local_sort, resize
+from repro.kernels.partition import partition_buckets
 
 _HI64 = np.uint64(0xFFFFFFFFFFFFFFFF)
 
@@ -68,9 +69,16 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
         q = (jnp.arange(1, p, dtype=jnp.int64) * n_valid) // p
         splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]
 
-    dest = jnp.sum(splitters[None, :] <= shard.keys[:, None].astype(jnp.uint64),
-                   axis=1).astype(jnp.int32)
-    dest = jnp.where(shard.valid_mask(), dest, p)
+    # fused SSSS classify (#splitters ≤ key): the u64 splitters and the
+    # zero-extended keys compare as (hi, lo) u32 planes lexicographically;
+    # invalid entries (index ≥ count) go to the trash destination p
+    keys64 = shard.keys.astype(jnp.uint64)
+    dest, _, _ = partition_buckets(
+        (keys64 >> np.uint64(32)).astype(jnp.uint32),
+        keys64.astype(jnp.uint32),
+        (splitters >> np.uint64(32)).astype(jnp.uint32),
+        splitters.astype(jnp.uint32),
+        n_buckets=p, count=shard.count, want_pos=False)
     out, ovf = _alltoall_route(shard, dest, axis_name, p, slot_cap)
     overflow = overflow + ovf
     out = local_sort(out)

@@ -135,22 +135,96 @@ def make_shard(keys: jax.Array, count=None, capacity: Optional[int] = None,
     return shard
 
 
-# Opt-in Pallas local-sort path (the TPU hot-spot kernel).  Off by default
-# on CPU because interpret-mode execution is slow.  The launcher, the tests
-# and ad-hoc runs all toggle it the same way: the ``REPRO_PALLAS_LOCAL_SORT``
-# environment variable (read at trace time, so ``monkeypatch.setenv`` works),
-# or programmatically via :func:`set_pallas_local_sort`.
-_PALLAS_LOCAL_SORT_OVERRIDE: Optional[bool] = None
+# Local-phase kernel policy.  Two Pallas kernels cover the local hot spots:
+# the bitonic local sort (kernels/bitonic) and the fused partition-into-
+# buckets classifier (kernels/partition).  On a TPU backend both default ON
+# — the local phase is the speed floor of every algorithm here; everywhere
+# else (CPU/sim CI) they default OFF because interpret-mode execution is
+# slow, and the jnp paths are the bitwise oracle the kernels are diffed
+# against.  The ``REPRO_LOCAL_KERNELS`` environment variable (read at trace
+# time, so ``monkeypatch.setenv`` works) overrides the default:
+#
+#   REPRO_LOCAL_KERNELS=all | 1 | on      both kernels
+#   REPRO_LOCAL_KERNELS=none | 0 | off    neither
+#   REPRO_LOCAL_KERNELS=sort,partition    an explicit subset
+#   REPRO_LOCAL_KERNELS=auto              backend default (TPU → both)
+#
+# The legacy sort-only toggles (``REPRO_PALLAS_LOCAL_SORT`` and
+# :func:`set_pallas_local_sort`) still work and override the ``sort``
+# component; :func:`set_local_kernels` overrides the whole policy.
 _TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("", "0", "none", "off", "false", "no")
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalKernelPolicy:
+    """Which Pallas local-phase kernels are active.  Frozen/hashable so it
+    can key a jit cache (``psort`` passes it as a static argument)."""
+
+    sort: bool = False
+    partition: bool = False
+
+
+_PALLAS_LOCAL_SORT_OVERRIDE: Optional[bool] = None
+_LOCAL_KERNELS_OVERRIDE: Optional[LocalKernelPolicy] = None
+
+
+def _default_local_kernels() -> LocalKernelPolicy:
+    on = jax.default_backend() == "tpu"
+    return LocalKernelPolicy(sort=on, partition=on)
+
+
+def _parse_local_kernels(spec: str) -> LocalKernelPolicy:
+    s = spec.strip().lower()
+    if s == "auto":
+        return _default_local_kernels()
+    if s in _FALSY:
+        return LocalKernelPolicy()
+    if s == "all" or s in _TRUTHY:
+        return LocalKernelPolicy(sort=True, partition=True)
+    parts = {t.strip() for t in s.split(",") if t.strip()}
+    unknown = parts - {"sort", "partition"}
+    if unknown:
+        raise ValueError(f"REPRO_LOCAL_KERNELS: unknown kernel(s) "
+                         f"{sorted(unknown)} in {spec!r} (know: sort, "
+                         f"partition, all, none, auto)")
+    return LocalKernelPolicy(sort="sort" in parts,
+                             partition="partition" in parts)
+
+
+def local_kernels() -> LocalKernelPolicy:
+    """The active local-kernel policy: programmatic override
+    (:func:`set_local_kernels`) > ``REPRO_LOCAL_KERNELS`` > backend default
+    (TPU → both on), with the legacy sort-only toggles layered on the
+    ``sort`` component."""
+    if _LOCAL_KERNELS_OVERRIDE is not None:
+        return _LOCAL_KERNELS_OVERRIDE
+    env = os.environ.get("REPRO_LOCAL_KERNELS")
+    pol = _parse_local_kernels(env) if env is not None \
+        else _default_local_kernels()
+    if _PALLAS_LOCAL_SORT_OVERRIDE is not None:
+        pol = dataclasses.replace(pol, sort=_PALLAS_LOCAL_SORT_OVERRIDE)
+    else:
+        legacy = os.environ.get("REPRO_PALLAS_LOCAL_SORT")
+        if legacy is not None:
+            pol = dataclasses.replace(pol, sort=legacy.lower() in _TRUTHY)
+    return pol
+
+
+def set_local_kernels(policy: Optional[LocalKernelPolicy]
+                      ) -> Optional[LocalKernelPolicy]:
+    """Force the whole kernel policy (``None`` = defer to the environment /
+    backend default again).  Returns the previous override."""
+    global _LOCAL_KERNELS_OVERRIDE
+    prev = _LOCAL_KERNELS_OVERRIDE
+    _LOCAL_KERNELS_OVERRIDE = policy
+    return prev
 
 
 def use_pallas_local_sort() -> bool:
-    """Is the Pallas local-sort kernel enabled?  Programmatic override
-    (:func:`set_pallas_local_sort`) wins over the ``REPRO_PALLAS_LOCAL_SORT``
-    environment variable; default off."""
-    if _PALLAS_LOCAL_SORT_OVERRIDE is not None:
-        return _PALLAS_LOCAL_SORT_OVERRIDE
-    return os.environ.get("REPRO_PALLAS_LOCAL_SORT", "").lower() in _TRUTHY
+    """Is the Pallas local-sort kernel enabled?  (Back-compat shim for the
+    pre-policy spelling: equals ``local_kernels().sort``.)"""
+    return local_kernels().sort
 
 
 def set_pallas_local_sort(enabled: Optional[bool]) -> Optional[bool]:

@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-bitonic/ — local sort + 2-way merge networks (VMEM-resident, VPU-only)
-kway/    — Super Scalar Sample Sort k-way classifier with tie-breaking
+bitonic/   — local sort + 2-way merge networks (VMEM-resident, VPU-only)
+kway/      — Super Scalar Sample Sort k-way classifier with tie-breaking
+partition/ — fused classify + histogram + in-bucket rank: the
+             (bucket, send_pos, hist) triple feeding every all_to_all
+             (what rams/samplesort/rquick actually call)
 
 Each kernel ships ops.py (jit wrapper + fallback) and ref.py (pure-jnp
 oracle); tests sweep shapes × dtypes against the oracle in interpret mode.
+Which kernels run is a policy decision: ``repro.core.types.local_kernels``
+(``REPRO_LOCAL_KERNELS`` — default on for TPU backends, off elsewhere).
 """

@@ -1,10 +1,21 @@
 """Jitted public wrappers around the bitonic Pallas kernels.
 
-``local_sort_fast(keys, vals)`` sorts arbitrary power-of-two sizes:
-tiles ≤ ``MAX_TILE`` are sorted by one kernel launch; larger inputs are
-sorted tile-wise and combined with log(n/MAX_TILE) merge-kernel passes.
-Falls back to jnp for sizes/dtypes the TPU kernel does not target
-(non-128-multiples, 64-bit words).
+``local_sort_fast(keys, vals)`` sorts **arbitrary sizes**: non-power-of-two
+inputs are padded up to the next power of two with ``pad_val`` and sliced
+back after the sort, so real shard capacities take the kernel path.  Tiles
+≤ ``MAX_TILE`` are sorted by one kernel launch; larger inputs are sorted
+tile-wise and combined with log(n/MAX_TILE) merge-kernel passes.  Only
+4-byte words lower to the TPU kernel — 64-bit keys fall back to the jnp
+reference.
+
+Padding caveat (shared with the power-of-two path, whose capacity padding
+has the same property): the bitonic network is *not stable*.  ``pad_val``
+defaults to the dtype's maximum (+inf for floats) and pads sort to the
+back; but when a payload travels along and real keys *equal* the pad
+value, a pad entry's payload may be exchanged with a real max-key
+element's payload.  Callers that sort max-representable keys with payloads
+should pass a ``pad_val`` known to be absent from the data, or use the
+stable jnp path (``use_kernel=False``).
 
 The kernels execute in ``interpret=True`` mode on CPU (this container);
 on TPU the same ``pallas_call`` lowers to Mosaic with the BlockSpecs
@@ -25,17 +36,51 @@ def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
 def supported(n: int, dtype) -> bool:
-    return (_is_pow2(n) and n >= LANES
-            and jnp.dtype(dtype).itemsize == 4)
+    """Does ``local_sort_fast`` take the kernel path for (n, dtype)?
+    Any positive size qualifies (pad-to-pow2); only 4-byte words lower."""
+    return n > 0 and jnp.dtype(dtype).itemsize == 4
+
+
+def _default_pad(dtype):
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.float32):
+        return jnp.float32(jnp.inf)
+    return jnp.iinfo(dt).max
 
 
 def local_sort_fast(keys: jax.Array, vals=None, *, interpret: bool = True,
-                    use_kernel: bool = True):
-    """Sort keys (u32/i32/f32) ascending, carrying an optional u32 payload."""
+                    use_kernel: bool = True, pad_val=None):
+    """Sort keys (u32/i32/f32) ascending, carrying an optional u32 payload.
+
+    ``pad_val`` fills the pad-to-power-of-two tail (default: dtype max /
+    +inf) — it must compare ≥ every real key; see the module docstring for
+    the max-key payload caveat."""
     n = keys.shape[0]
     if not (use_kernel and supported(n, keys.dtype)):
         return bitonic_ref(keys, vals)
+    m = max(LANES, _next_pow2(n))
+    if m != n:
+        if pad_val is None:
+            pad_val = _default_pad(keys.dtype)
+        keys = jnp.concatenate(
+            [keys, jnp.full((m - n,), pad_val, keys.dtype)])
+        if vals is not None:
+            vals = jnp.concatenate(
+                [vals, jnp.zeros((m - n,), vals.dtype)])
+        if vals is None:
+            return _sort_pow2(keys, None, interpret)[:n]
+        ks, vs = _sort_pow2(keys, vals, interpret)
+        return ks[:n], vs[:n]
+    return _sort_pow2(keys, vals, interpret)
+
+
+def _sort_pow2(keys, vals, interpret):
+    n = keys.shape[0]
     if n <= MAX_TILE:
         return bitonic.sort_tile(keys, vals, interpret=interpret)
     # tile-wise sort + log2(n/tile) merge passes

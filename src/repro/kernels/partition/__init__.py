@@ -4,4 +4,6 @@ the (bucket, send_pos, hist) triple every all_to_all-based algorithm needs.
 
 ``partition_ref`` (ref.py) is the jnp contract; the Pallas TPU kernel lives
 in partition.py with the dispatcher in ops.py."""
+from .ops import MAX_BUCKETS, partition_buckets  # noqa: F401
+from .partition import LANES, partition_tile  # noqa: F401
 from .ref import partition_ref  # noqa: F401

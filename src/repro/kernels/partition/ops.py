@@ -1,0 +1,84 @@
+"""Dispatcher for the fused partition-into-buckets primitive.
+
+``partition_buckets`` is what the algorithms call (``rams._rams_level``,
+``samplesort``'s destination map, ``rquick``'s split point).  It picks the
+Pallas tile kernel (partition.py) or the jnp reference (ref.py) — bitwise
+identical by tests/test_partition.py — and hides the tiling:
+
+  * the shard is padded to a lane multiple and cut into VMEM-sized tiles
+    (tile rows shrink as the bucket count grows: the kernel's working set
+    is the (R, 128, nb+1) one-hot);
+  * the running histogram threads through the launches, so ranks are
+    global over the whole shard exactly like the reference's one argsort.
+
+Kernel-vs-ref selection: an explicit ``use_kernel`` wins; ``None`` defers
+to :func:`repro.core.types.local_kernels` (the ``REPRO_LOCAL_KERNELS``
+policy — default on for TPU backends, off elsewhere).  The ref handles
+every case; the kernel additionally requires uint32 planes, 2 ≤ nb ≤
+``MAX_BUCKETS`` and at least one full lane row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .partition import LANES, partition_tile
+from .ref import partition_ref
+
+MAX_BUCKETS = 512            # beyond this the one-hot tile no longer fits
+_VMEM_WORDS = 1 << 20        # ≈4 MiB budget for one (R, 128, nb+1) i32
+
+
+def _tile_rows(n_buckets: int) -> int:
+    rows = _VMEM_WORDS // (LANES * (n_buckets + 1))
+    return max(8, min(64, (rows // 8) * 8))
+
+
+def partition_buckets(keys, ties, s_keys, s_ties, *, n_buckets: int,
+                      count=None, inclusive: bool = True,
+                      want_pos: bool = True, interpret: bool = True,
+                      use_kernel=None):
+    """Fused classify + rank + histogram over a locally-sorted shard.
+
+    Same contract as :func:`repro.kernels.partition.ref.partition_ref`
+    (see there for argument semantics); ``use_kernel`` selects the Pallas
+    path (None → the ``local_kernels()`` policy)."""
+    if use_kernel is None:
+        from repro.core.types import local_kernels
+        use_kernel = local_kernels().partition
+    C = keys.shape[0]
+    eligible = (use_kernel and C >= LANES and 2 <= n_buckets <= MAX_BUCKETS
+                and keys.dtype == jnp.uint32 and ties.dtype == jnp.uint32
+                and s_keys.dtype == jnp.uint32 and s_ties.dtype == jnp.uint32)
+    if not eligible:
+        return partition_ref(keys, ties, s_keys, s_ties, n_buckets=n_buckets,
+                             count=count, inclusive=inclusive,
+                             want_pos=want_pos)
+
+    cnt = jnp.asarray(C if count is None else count, jnp.int32)
+    pad = (-C) % LANES
+    if pad:                     # pad rows classify as trash (flat ≥ nvalid)
+        fill = jnp.full((pad,), 0xFFFFFFFF, jnp.uint32)
+        keys = jnp.concatenate([keys, fill])
+        ties = jnp.concatenate([ties, fill])
+    tile = _tile_rows(n_buckets) * LANES
+    hist = jnp.zeros((1, n_buckets + 1), jnp.int32)
+    buckets, poss = [], []
+    off = 0
+    total = C + pad
+    while off < total:
+        step = min(tile, total - off)
+        R = step // LANES
+        nv = jnp.clip(cnt - off, 0, step).reshape(1, 1)
+        b, q, hist = partition_tile(
+            keys[off:off + step].reshape(R, LANES),
+            ties[off:off + step].reshape(R, LANES),
+            s_keys, s_ties, hist, nv,
+            n_buckets=n_buckets, inclusive=inclusive, interpret=interpret)
+        buckets.append(b.reshape(step))
+        poss.append(q.reshape(step))
+        off += step
+    bucket = jnp.concatenate(buckets)[:C] if len(buckets) > 1 \
+        else buckets[0][:C]
+    pos = (jnp.concatenate(poss)[:C] if len(poss) > 1 else poss[0][:C]) \
+        if want_pos else None
+    return bucket, pos, hist[0, :n_buckets]

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused splitter classify + histogram + in-bucket rank.
+
+One VMEM-resident pass over a (R, 128) tile does everything the all_to_all
+routing needs (the IPS⁴o block-partition shape, arXiv 2009.13569, mapped
+onto the VPU):
+
+  * classify: branchless SSSS ``#splitters ≤ elem`` as a lexicographic
+    (key, tie) broadcast-compare against the S = nb-1 splitter planes —
+    no u64 composites materialize, the two u32 planes compare directly;
+  * histogram + stable rank: an (R, 128, nb+1) one-hot is reduced twice —
+    ``cumsum`` along lanes + a row-prefix along sublanes give each element
+    its stable in-bucket rank in flat (row-major) order, and the column
+    sums give the tile histogram.  Elements at flat index ≥ ``nvalid``
+    (shard padding) land in the **trash bucket** nb.
+
+The kernel is deliberately ``grid=(1,)`` whole-tile — like kernels/bitonic,
+and unlike kernels/kway's ``program_id``-based grid — so it stays correct
+under vmap batching (the sim backend wraps every PE body in one vmap; jax
+prepends batch dims to the pallas grid, which breaks program_id-relative
+offsets but leaves whole-tile launches untouched).  Host code in ops.py
+chains tiles by threading the running histogram through successive
+launches; ``prev_hist[bucket] + rank_in_tile`` is then the global stable
+send position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _partition_kernel(keys_ref, ties_ref, sk_ref, st_ref, ph_ref, nv_ref,
+                      bucket_ref, pos_ref, hist_ref, *,
+                      n_buckets: int, inclusive: bool):
+    R = keys_ref.shape[0]
+    nbt = n_buckets + 1
+    k = keys_ref[...][..., None]                     # (R, 128, 1)
+    t = ties_ref[...][..., None]
+    sk = sk_ref[...][None, None, :]                  # (1, 1, S)
+    st = st_ref[...][None, None, :]
+    if inclusive:                                    # splitter ≤ element?
+        le = (sk < k) | ((sk == k) & (st <= t))
+    else:                                            # splitter < element?
+        le = (sk < k) | ((sk == k) & (st < t))
+    bucket = jnp.sum(le, axis=-1, dtype=jnp.int32)   # (R, 128)
+    r = jax.lax.broadcasted_iota(jnp.int32, (R, LANES), 0)
+    l = jax.lax.broadcasted_iota(jnp.int32, (R, LANES), 1)
+    flat = r * LANES + l
+    bucket = jnp.where(flat < nv_ref[0, 0], bucket, jnp.int32(n_buckets))
+    bucket_ref[...] = bucket
+
+    mask = bucket[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (R, LANES, nbt), 2)
+    onehot = mask.astype(jnp.int32)                  # (R, 128, nbt)
+    crow = jnp.cumsum(onehot, axis=1, dtype=jnp.int32)   # within-row, incl.
+    rowtot = jnp.sum(onehot, axis=1, dtype=jnp.int32)    # (R, nbt)
+    rows_before = jnp.cumsum(rowtot, axis=0, dtype=jnp.int32) - rowtot
+    prev = ph_ref[...]                               # (1, nbt) running hist
+    base = prev[0][None, None, :] + rows_before[:, None, :]
+    # select my bucket's column: rank = earlier rows + earlier-in-row + prev
+    pos_ref[...] = jnp.sum(jnp.where(mask, base + crow - jnp.int32(1),
+                                     jnp.int32(0)), axis=-1, dtype=jnp.int32)
+    hist_ref[...] = prev + jnp.sum(rowtot, axis=0, dtype=jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_buckets", "inclusive", "interpret"))
+def partition_tile(keys2, ties2, s_keys, s_ties, prev_hist, nvalid, *,
+                   n_buckets: int, inclusive: bool = True,
+                   interpret: bool = True):
+    """Partition one (R, 128) tile.  ``prev_hist`` is the (1, nb+1) running
+    histogram of earlier tiles (trash bucket included); ``nvalid`` is a
+    (1, 1) int32 count of valid elements in this tile (flat order).
+    Returns (bucket (R,128), pos (R,128), new_hist (1, nb+1))."""
+    R = keys2.shape[0]
+    nbt = n_buckets + 1
+    blk = pl.BlockSpec((R, LANES), lambda i: (i, 0))
+    svec = pl.BlockSpec((n_buckets - 1,), lambda i: (0,))
+    hblk = pl.BlockSpec((1, nbt), lambda i: (0, 0))
+    one = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    kern = functools.partial(_partition_kernel, n_buckets=n_buckets,
+                             inclusive=inclusive)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((R, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((R, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((1, nbt), jnp.int32)),
+        in_specs=[blk, blk, svec, svec, hblk, one],
+        out_specs=(blk, blk, hblk),
+        grid=(1,), interpret=interpret)(keys2, ties2, s_keys, s_ties,
+                                        prev_hist, nvalid)

@@ -63,6 +63,42 @@ def test_fallback_small_and_odd_sizes(rng):
         np.testing.assert_array_equal(np.asarray(out), np.sort(k))
 
 
+@pytest.mark.parametrize("n", [100, 200, 5000])
+def test_sort_kernel_non_pow2_sizes(n, rng):
+    """Non-power-of-two inputs take the kernel path via pad-to-pow2."""
+    from repro.kernels.bitonic import ops
+    assert ops.supported(n, jnp.uint32)
+    k = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    out = np.asarray(local_sort_fast(jnp.asarray(k)))
+    np.testing.assert_array_equal(out, np.sort(k))
+
+
+def test_sort_kernel_non_pow2_payload(rng):
+    n = 300
+    k = rng.integers(0, 50, size=n).astype(np.uint32)   # heavy ties
+    v = np.arange(n, dtype=np.uint32)
+    ok, ov = local_sort_fast(jnp.asarray(k), jnp.asarray(v))
+    ok, ov = np.asarray(ok), np.asarray(ov)
+    np.testing.assert_array_equal(ok, np.sort(k))
+    assert len(np.unique(ov)) == n                      # no pad payload leaked
+    np.testing.assert_array_equal(k[ov], ok)            # pairs stay together
+
+
+def test_sort_kernel_pad_val_override(rng):
+    """A caller-chosen pad value (absent from but ≥ the data — the
+    documented escape hatch for max-key payloads) keeps pads at the back
+    and the payload a clean permutation."""
+    n = 200
+    k = rng.integers(0, 4, size=n).astype(np.uint32)
+    v = np.arange(n, dtype=np.uint32)
+    ok, ov = local_sort_fast(jnp.asarray(k), jnp.asarray(v),
+                             pad_val=np.uint32(5))
+    ok, ov = np.asarray(ok), np.asarray(ov)
+    np.testing.assert_array_equal(ok, np.sort(k))
+    assert len(np.unique(ov)) == n
+    np.testing.assert_array_equal(k[ov], ok)
+
+
 @pytest.mark.parametrize("nb", [2, 8, 64, 128])
 @pytest.mark.parametrize("C", [8192, 16384])
 def test_kway_classifier_sweep(nb, C, rng):

@@ -16,10 +16,24 @@ import jax.numpy as jnp
 import pytest
 
 import repro.core  # noqa: F401  — flips jax_enable_x64 on
-from repro.data.distributions import INSTANCES
-from repro.kernels.partition import partition_ref
+from repro.core.types import (LocalKernelPolicy, local_kernels,
+                              set_local_kernels, set_pallas_local_sort)
+from repro.data.distributions import INSTANCES, generate_instance
+from repro.kernels.partition import partition_buckets, partition_ref
 
 AXIS = "pe"
+
+
+@pytest.fixture
+def clean_policy(monkeypatch):
+    """No env vars, no programmatic overrides — restores both on exit."""
+    monkeypatch.delenv("REPRO_LOCAL_KERNELS", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_LOCAL_SORT", raising=False)
+    prev_pol = set_local_kernels(None)
+    prev_sort = set_pallas_local_sort(None)
+    yield
+    set_local_kernels(prev_pol)
+    set_pallas_local_sort(prev_sort)
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +136,193 @@ def test_partition_ref_want_pos_false():
     assert p2 is None
     np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
     np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+# ---------------------------------------------------------------------------
+# the Pallas kernel (interpret mode) vs the jnp reference
+# ---------------------------------------------------------------------------
+
+# nb sweeps the SSSS fan-outs (2 = rquick's split, 128 = deep RAMS level);
+# C covers tile-multiple, non-multiple-of-128 and non-pow2 capacities.
+KERNEL_CASES = [
+    ("Uniform", 1024, 64, 1024), ("Uniform", 1000, 8, 777),
+    ("Zero", 1024, 64, 1024), ("Zero", 257, 16, 200),
+    ("DeterDupl", 512, 32, 512), ("RandDupl", 384, 128, 300),
+    ("Staggered", 4096, 128, 4096), ("Mirrored", 192, 2, 100),
+    ("Uniform", 256, 16, 0), ("Reverse", 130, 2, 130),
+    ("g-Group", 8256, 64, 8000),
+]
+
+
+@pytest.mark.parametrize("name,C,nb,count", KERNEL_CASES)
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_partition_kernel_matches_ref(name, C, nb, count, inclusive):
+    keys, ties, sk, st = _case(name, C, nb, count)
+    args = tuple(map(jnp.asarray, (keys, ties, sk, st)))
+    kb, kp, kh = partition_buckets(*args, n_buckets=nb, count=count,
+                                   inclusive=inclusive, use_kernel=True)
+    rb, rp, rh = partition_buckets(*args, n_buckets=nb, count=count,
+                                   inclusive=inclusive, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
+    assert int(np.asarray(kh).sum()) == count
+
+
+def test_partition_kernel_vmap_batch():
+    """The kernel must survive jax batching (the sim backend vmaps every
+    per-PE body): 4 lanes with heterogeneous counts vs per-lane ref."""
+    B, C, nb = 4, 512, 16
+    counts = np.array([512, 300, 1, 0], np.int32)
+    lanes = [_case("RandDupl", C, nb, int(c), seed=i)
+             for i, c in enumerate(counts)]
+    keys = jnp.asarray(np.stack([l[0] for l in lanes]))
+    ties = jnp.asarray(np.stack([l[1] for l in lanes]))
+    sk = jnp.asarray(lanes[0][2])
+    st = jnp.asarray(lanes[0][3])
+
+    def one(k, t, c):
+        return partition_buckets(k, t, sk, st, n_buckets=nb, count=c,
+                                 use_kernel=True)
+
+    bb, bp, bh = jax.vmap(one)(keys, ties, jnp.asarray(counts))
+    for i in range(B):
+        rb, rp, rh = partition_buckets(
+            keys[i], ties[i], sk, st, n_buckets=nb, count=int(counts[i]),
+            use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(bb)[i], np.asarray(rb))
+        np.testing.assert_array_equal(np.asarray(bp)[i], np.asarray(rp))
+        np.testing.assert_array_equal(np.asarray(bh)[i], np.asarray(rh))
+
+
+def test_partition_kernel_falls_back_below_lane_width():
+    """C < 128 can't tile a VPU row — the wrapper must silently take the
+    jnp reference and still be exact."""
+    keys, ties, sk, st = _case("Uniform", 64, 8, 50)
+    kb, kp, kh = partition_buckets(keys, ties, sk, st, n_buckets=8, count=50,
+                                   use_kernel=True)
+    rb, rp, rh = partition_buckets(keys, ties, sk, st, n_buckets=8, count=50,
+                                   use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
+
+
+# ---------------------------------------------------------------------------
+# kernel policy: env parsing, overrides, legacy interplay
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,expect", [
+    ("all", (True, True)), ("1", (True, True)), ("on", (True, True)),
+    ("", (False, False)), ("0", (False, False)), ("none", (False, False)),
+    ("off", (False, False)), ("sort", (True, False)),
+    ("partition", (False, True)), ("sort,partition", (True, True)),
+    ("partition, sort", (True, True)),
+])
+def test_local_kernels_env_parsing(clean_policy, monkeypatch, spec, expect):
+    monkeypatch.setenv("REPRO_LOCAL_KERNELS", spec)
+    pol = local_kernels()
+    assert (pol.sort, pol.partition) == expect
+
+
+def test_local_kernels_env_auto_is_backend_default(clean_policy, monkeypatch):
+    monkeypatch.setenv("REPRO_LOCAL_KERNELS", "auto")
+    on = jax.default_backend() == "tpu"
+    assert local_kernels() == LocalKernelPolicy(sort=on, partition=on)
+
+
+def test_local_kernels_env_rejects_unknown(clean_policy, monkeypatch):
+    monkeypatch.setenv("REPRO_LOCAL_KERNELS", "sort,warp")
+    with pytest.raises(ValueError, match="warp"):
+        local_kernels()
+
+
+def test_set_local_kernels_beats_env(clean_policy, monkeypatch):
+    monkeypatch.setenv("REPRO_LOCAL_KERNELS", "none")
+    prev = set_local_kernels(LocalKernelPolicy(sort=False, partition=True))
+    try:
+        assert local_kernels() == LocalKernelPolicy(sort=False,
+                                                    partition=True)
+    finally:
+        set_local_kernels(prev)
+
+
+def test_legacy_sort_flag_layers_onto_policy(clean_policy, monkeypatch):
+    # env form: REPRO_PALLAS_LOCAL_SORT only touches the sort component
+    monkeypatch.setenv("REPRO_LOCAL_KERNELS", "partition")
+    monkeypatch.setenv("REPRO_PALLAS_LOCAL_SORT", "1")
+    assert local_kernels() == LocalKernelPolicy(sort=True, partition=True)
+    monkeypatch.setenv("REPRO_PALLAS_LOCAL_SORT", "0")
+    assert local_kernels() == LocalKernelPolicy(sort=False, partition=True)
+    # programmatic form
+    monkeypatch.delenv("REPRO_PALLAS_LOCAL_SORT")
+    prev = set_pallas_local_sort(True)
+    try:
+        assert local_kernels().sort is True
+    finally:
+        set_pallas_local_sort(prev)
+
+
+# ---------------------------------------------------------------------------
+# end to end: psort with kernels on vs off must agree bitwise everywhere
+# ---------------------------------------------------------------------------
+
+ALL_ALGOS = ["rquick", "rfis", "rams", "bitonic", "ssort", "gatherm",
+             "allgatherm"]
+CORE_INSTANCES = ["Uniform", "Zero", "g-Group", "Staggered"]
+# instances where classical sample sort legitimately overflows its static
+# slots at small p (same subset test_differential.py carves out): there the
+# contract is off == on, not overflow == 0.
+SSORT_OVERFLOWS = ("Zero", "DeterDupl", "RandDupl", "Mirrored")
+
+
+def _e2e_cells():
+    for algorithm in ALL_ALGOS:
+        for instance in sorted(INSTANCES):
+            marks = [] if instance in CORE_INSTANCES else [pytest.mark.slow]
+            yield pytest.param(algorithm, instance, marks=marks,
+                               id=f"{algorithm}-{instance}")
+
+
+@pytest.mark.parametrize("algorithm,instance", list(_e2e_cells()))
+def test_psort_kernel_policy_bitwise(clean_policy, algorithm, instance):
+    from repro.core.api import psort
+    p = 8
+    x = generate_instance(instance, p, 32 * p, seed=3).astype(np.int32)
+    set_local_kernels(LocalKernelPolicy())
+    off, i0 = psort(x, p=p, algorithm=algorithm, backend="sim",
+                    return_info=True)
+    set_local_kernels(LocalKernelPolicy(sort=True, partition=True))
+    on, i1 = psort(x, p=p, algorithm=algorithm, backend="sim",
+                   return_info=True)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    assert i0["overflow"] == i1["overflow"]
+    if algorithm != "ssort" or instance not in SSORT_OVERFLOWS:
+        assert i1["overflow"] == 0
+        np.testing.assert_array_equal(np.asarray(on), np.sort(x))
+
+
+def test_local_kernels_env_busts_psort_jit_cache(clean_policy, monkeypatch):
+    """Flipping REPRO_LOCAL_KERNELS between same-signature psort calls must
+    retrace (the policy keys the jit cache), not reuse the kernel-less
+    executable — and the retraced result must stay bitwise identical."""
+    import repro.core.rams as rams_mod
+    from repro.core.api import psort
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 1 << 20, size=2048).astype(np.int32)
+
+    out_plain = psort(x, p=4, algorithm="rams", backend="sim")
+
+    called = []
+    real = rams_mod.partition_buckets
+    monkeypatch.setattr(
+        rams_mod, "partition_buckets",
+        lambda *a, **k: (called.append(1), real(*a, **k))[1])
+    monkeypatch.setenv("REPRO_LOCAL_KERNELS", "partition")
+    out_kern = psort(x, p=4, algorithm="rams", backend="sim")
+    assert called, "policy flip did not retrace psort"
+    np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_kern))
 
 
 # ---------------------------------------------------------------------------
