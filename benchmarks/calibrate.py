@@ -167,15 +167,61 @@ def bench_all_gather(p: int, w: int, chain: int = 8) -> float:
     return _median_seconds(f, x) / chain
 
 
-def bench_local_sort_rate(p: int, m: int = 1 << 14) -> float:
-    """Local words/s in model units: per-PE sort of m words costs
-    m·lg(m)/local_rate on the host that co-executes all p PEs."""
-    f = jax.jit(comm.sim_map(lambda v: jnp.sort(v), "pe", p))
+def _local_sort_seconds(p: int, m: int, kernel: bool = False) -> float:
     r = np.random.default_rng(0)
+    if kernel:
+        from repro.kernels.bitonic import local_sort_fast
+        f = jax.jit(lambda v: local_sort_fast(v))
+        x = jnp.asarray(r.integers(0, 2**32, size=m, dtype=np.int64)
+                        .astype(np.uint32))
+        return _median_seconds(f, x)
+    f = jax.jit(comm.sim_map(lambda v: jnp.sort(v), "pe", p))
     x = jnp.asarray(r.integers(0, 2**31, size=(p, m), dtype=np.int64)
                     .astype(np.int32))
-    t = _median_seconds(f, x)
-    return m * math.log2(m) / t
+    return _median_seconds(f, x)
+
+
+def bench_local_sort_rate(p: int, m: int = 1 << 14,
+                          kernel: bool = False) -> float:
+    """Local words/s in model units: per-PE sort of m words costs
+    m·lg(m)/local_rate on the host that co-executes all p PEs.
+
+    ``kernel=True`` times the Pallas bitonic path on one shard instead
+    (interpret mode off-TPU — a machinery check, not silicon perf)."""
+    return m * math.log2(m) / _local_sort_seconds(p, m, kernel)
+
+
+def _partition_seconds(p: int, m: int, nb: int, kernel: bool = False) -> float:
+    from repro.kernels.partition import partition_buckets
+    r = np.random.default_rng(0)
+    keys = np.sort(r.integers(0, 2**32, size=(p, m), dtype=np.int64)
+                   .astype(np.uint32), axis=1)
+    ties = r.integers(0, 2**32, size=(p, m), dtype=np.int64).astype(np.uint32)
+    sk = jnp.asarray(np.sort(r.integers(0, 2**32, size=nb - 1, dtype=np.int64)
+                             .astype(np.uint32)))
+    st = jnp.asarray(np.zeros(nb - 1, np.uint32))
+
+    def body(k, t):
+        return partition_buckets(k, t, sk, st, n_buckets=nb,
+                                 use_kernel=kernel)
+
+    if kernel:
+        f = jax.jit(body)
+        return _median_seconds(f, jnp.asarray(keys[0]), jnp.asarray(ties[0]))
+    f = jax.jit(comm.sim_map(body, "pe", p))
+    return _median_seconds(f, jnp.asarray(keys), jnp.asarray(ties))
+
+
+def bench_partition_rate(p: int, m: int = 1 << 14, nb: int = 64,
+                         kernel: bool = False) -> float:
+    """Partition words/s in model units: classify + rank + histogram of m
+    locally-sorted words into nb buckets costs m·lg(nb)/partition_rate
+    (the searchsorted depth — the fused kernel's branchless scan is
+    O(m·nb) arithmetic but one memory pass, which is what the wall-clock
+    actually tracks).  ``kernel=False`` times the jnp reference the sim
+    backend runs, co-executing all p PEs like the other primitives;
+    ``kernel=True`` times the fused Pallas kernel on one shard."""
+    return m * math.log2(max(2, nb)) / _partition_seconds(p, m, nb, kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -313,11 +359,17 @@ def measure_profile(ps, name: str) -> CostModel:
         alpha_c = max(float(t_coll[0]) - alpha_hop * float(hops[0]),
                       1e-3 * prior.alpha_c)
     local_rate = bench_local_sort_rate(pmax)
+    partition_rate = bench_partition_rate(pmax)
+    # kernel variants run in interpret mode off-TPU: one small shard each,
+    # recorded for the bench trajectory (not used as profile constants)
+    sort_kernel_rate = bench_local_sort_rate(1, m=1 << 11, kernel=True)
+    partition_kernel_rate = bench_partition_rate(1, m=1 << 12, kernel=True)
     return CostModel(
         name=name,
         alpha=float(alpha), alpha_c=float(alpha_c),
         alpha_hop=float(alpha_hop), beta=float(beta),
         local_rate=float(local_rate),
+        partition_rate=float(partition_rate),
         slot_overhead=prior.slot_overhead,
         meta={
             "microbench": {
@@ -325,6 +377,10 @@ def measure_profile(ps, name: str) -> CostModel:
                 "p": list(ps), "p_payload": pmax,
                 "ppermute_s": {"w1": alpha, f"w{w_lo}": t_lo, f"w{w_hi}": t_hi},
                 "all_gather_s": {str(p): float(t) for p, t in zip(ps, t_coll)},
+                "local_sort_words_s": float(local_rate),
+                "local_sort_kernel_words_s": float(sort_kernel_rate),
+                "partition_words_s": float(partition_rate),
+                "partition_kernel_words_s": float(partition_kernel_rate),
                 "host": platform.node(),
                 "backend": "sim",
             },
@@ -422,6 +478,30 @@ def run_sweep(ps, exps_override, iters: int):
     return cells
 
 
+def run_local_bench(pmax: int):
+    """Local-phase wall-clock cells (sort vs partition, jnp vs Pallas
+    kernel) for the CI trajectory gate.  They carry no counted-trace
+    features, so they merge into the JSON's ``bench`` mapping only —
+    never into the NNLS fit cells.  The ``p`` key labels the sweep's
+    pmax for stable cell addressing (the kernel variants time one shard
+    in interpret mode); ``e`` is log2 of the per-shard word count."""
+    rows = []
+    for label, m, kernel in (("local/sort_rate", 1 << 14, False),
+                             ("local/sort_kernel", 1 << 11, True),
+                             ("local/partition_rate", 1 << 14, False),
+                             ("local/partition_kernel", 1 << 12, True)):
+        p_run = 1 if kernel else pmax
+        if label.startswith("local/sort"):
+            t = _local_sort_seconds(p_run, m, kernel=kernel)
+        else:
+            t = _partition_seconds(p_run, m, 64, kernel=kernel)
+        us = t * 1e6
+        rows.append({"p": pmax, "e": int(math.log2(m)),
+                     "algorithm": label, "us": us})
+        emit(f"calibrate/{label}", us, f"m=2^{int(math.log2(m))}")
+    return rows
+
+
 SUBGROUP_PS = (4, 16, 64)
 SUBGROUP_DS = (1, 2, 4)
 
@@ -494,7 +574,8 @@ def write_experiments(path: str, model: CostModel):
         f"Machine profile: **{model.name}** "
         f"(α={model.alpha:.3g}s, α_c={model.alpha_c:.3g}s, "
         f"α_hop={model.alpha_hop:.3g}s, β={model.beta:.3g}s/word, "
-        f"local={model.local_rate:.3g}w/s)",
+        f"local={model.local_rate:.3g}w/s, "
+        f"partition={model.part_rate:.3g}w/s)",
         "",
     ]
     for p in (64, 1024, 262144):
@@ -571,8 +652,10 @@ def write_experiments(path: str, model: CostModel):
         "| `alpha_hop` | float s | per torus hop; fused collectives are "
         "charged `alpha_hop · p^(1/3)` pipeline fill |",
         "| `beta` | float s/word | per 32-bit word on the wire |",
-        "| `local_rate` | float words/s | local sort/merge/partition "
-        "throughput |",
+        "| `local_rate` | float words/s | local sort/merge throughput |",
+        "| `partition_rate` | float words/s / null | splitter-partition "
+        "(classify + rank + histogram) throughput; null in profiles that "
+        "predate the fused partition kernel → falls back to `local_rate` |",
         "| `slot_overhead` | float | static slot provisioning factor of "
         "the a2a exchanges |",
         "| `alpha_inner` | float s / null | intra-axis p2p step of a "
@@ -640,7 +723,8 @@ def main(argv=None):
     model = measure_profile(args.p, machine)
     print(f"# microbenched profile: α={model.alpha:.3g}  "
           f"α_c={model.alpha_c:.3g}  α_hop={model.alpha_hop:.3g}  "
-          f"β={model.beta:.3g}  local_rate={model.local_rate:.3g}")
+          f"β={model.beta:.3g}  local_rate={model.local_rate:.3g}  "
+          f"partition_rate={model.part_rate:.3g}")
     if args.nested:
         p_o, p_i = args.nested
         model = measure_nested_profile(model, p_o, p_i)
@@ -653,6 +737,7 @@ def main(argv=None):
         cells += run_nested_sweep(p_o, p_i, args.iters,
                                   exps=tuple(EXPS_FAST) if args.fast
                                   else (0, 2, 4))
+    local_cells = run_local_bench(max(args.p))
     # whole-program regression over the sweep — diagnostic only (see
     # module docstring); kept in meta so the two views can be compared
     sweep_fit = fit_profile(cells, machine)
@@ -683,7 +768,7 @@ def main(argv=None):
               " ".join(f"2^{e}:{w}" for e, w in pred_rows))
 
     bench = {}
-    for c in cells:
+    for c in cells + local_cells:
         bench.setdefault(str(c["p"]), {}).setdefault(
             c["algorithm"], {})[str(c["e"])] = c["us"]
     with open(args.bench_json, "w") as f:
@@ -696,6 +781,7 @@ def main(argv=None):
                         "alpha": model.alpha, "alpha_c": model.alpha_c,
                         "alpha_hop": model.alpha_hop, "beta": model.beta,
                         "local_rate": model.local_rate,
+                        "partition_rate": model.partition_rate,
                         "alpha_inner": model.alpha_inner,
                         "alpha_c_inner": model.alpha_c_inner,
                         "beta_inner": model.beta_inner},

@@ -46,7 +46,11 @@ class CostModel:
     alpha_hop  — seconds per torus hop (pipeline fill of fused collectives,
                  charged × p^(1/3));
     beta       — seconds per 32-bit word on the wire;
-    local_rate — words/s of local sort/merge/partition throughput;
+    local_rate — words/s of local sort/merge throughput;
+    partition_rate — words/s of splitter-partition (classify + rank +
+                 histogram) throughput; ``None`` in profiles that predate
+                 the fused partition kernel → the ``part_rate`` property
+                 falls back to ``local_rate``;
     slot_overhead — static slot provisioning factor of the a2a exchanges;
     meta       — free-form fit diagnostics (R², sweep grid, host, …).
 
@@ -66,6 +70,7 @@ class CostModel:
     alpha_hop: float = 1.5e-6
     beta: float = BYTES_PER_WORD / 50e9      # 50 GB/s per ICI link
     local_rate: float = 2e9
+    partition_rate: Optional[float] = None
     slot_overhead: float = 2.2
     alpha_inner: Optional[float] = None      # intra-axis p2p step
     alpha_c_inner: Optional[float] = None    # intra-axis fused launch
@@ -95,6 +100,11 @@ class CostModel:
         """One fused collective on the fast intra axis: launch cost only —
         intra-host links pay no torus-diameter pipeline fill."""
         return self.ac_inner
+
+    @property
+    def part_rate(self) -> float:
+        return self.local_rate if self.partition_rate is None \
+            else self.partition_rate
 
     # -- JSON round-trip --------------------------------------------------
 
@@ -165,7 +175,8 @@ def cost_rquick(n, p, model: CostModel = DEFAULT_MODEL):
     return (m.alpha * (d * (d + 1) / 2)         # per-dim median butterflies
             + m.alpha * 2 * d                   # shuffle + exchanges
             + m.beta * npp * (2 * d)            # shuffle + per-dim halves
-            + (npp * _lg(n) + npp * d) / m.local_rate)
+            + npp * _lg(n) / m.local_rate       # local sort
+            + npp * d / m.part_rate)            # per-dim pivot partition
 
 
 def cost_rams(n, p, levels=None, model: CostModel = DEFAULT_MODEL,
@@ -179,7 +190,8 @@ def cost_rams(n, p, levels=None, model: CostModel = DEFAULT_MODEL,
     k = p ** (1.0 / l)
     return ((3 * l + 1) * m.coll(p)             # samples, hist, a2a / level
             + m.beta * npp * (m.slot_overhead * l + 1)  # l exchanges + shuffle
-            + (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate)
+            + npp * _lg(n) / m.local_rate       # local sort
+            + npp * l * _lg(k) / m.part_rate)   # k-way partition per level
 
 
 def _cost_rams_nested(n, p, levels, m: CostModel, mesh_shape):
@@ -195,7 +207,8 @@ def _cost_rams_nested(n, p, levels, m: CostModel, mesh_shape):
         k = max(2.0, p_i ** (1.0 / l))
         return ((3 * l + 1) * m.coll_inner(p_i)
                 + m.b_inner * npp * (m.slot_overhead * l + 1)
-                + (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate)
+                + npp * _lg(n) / m.local_rate
+                + npp * l * _lg(k) / m.part_rate)
     l_i = 0 if p_i <= 1 or levels == 1 else \
         (max(1, levels - 1) if levels else
          max(1, min(3, round(_d(p_i) / 6))))
@@ -208,7 +221,7 @@ def _cost_rams_nested(n, p, levels, m: CostModel, mesh_shape):
     inner = (3 * l_i * m.coll_inner(p_i)
              + m.b_inner * npp * m.slot_overhead * l_i)
     k = max(2.0, p ** (1.0 / l))
-    local = (npp * _lg(n) + npp * l * _lg(k)) / m.local_rate
+    local = npp * _lg(n) / m.local_rate + npp * l * _lg(k) / m.part_rate
     return outer + inner + local
 
 
@@ -230,7 +243,8 @@ def cost_ssort(n, p, model: CostModel = DEFAULT_MODEL):
     # (paper §VII).  Each PE also scans the p-sized splitter set locally.
     return (m.coll(p) * 3 + m.beta * (npp * m.slot_overhead + 16 * _lg(p) * p)
             + m.alpha_hop * _hops(p)
-            + (npp * _lg(n) + p) / m.local_rate)
+            + npp * _lg(n) / m.local_rate       # local sort
+            + p / m.part_rate)                  # p-way splitter scan
 
 
 COSTS = {

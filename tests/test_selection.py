@@ -41,6 +41,34 @@ def test_cost_model_rejects_unknown_fields():
         CostModel.from_json('{"name": "x", "gamma": 1.0}')
 
 
+def test_partition_rate_roundtrips_and_defaults():
+    m = CostModel(name="unit", local_rate=2e9, partition_rate=8e9)
+    loaded = CostModel.from_json(m.to_json())
+    assert loaded == m and loaded.part_rate == 8e9
+    # profiles written before the fused partition kernel have no
+    # partition_rate key: they must still load, falling back to local_rate
+    old = CostModel.from_json('{"name": "pre-partition", "local_rate": 3e9}')
+    assert old.partition_rate is None
+    assert old.part_rate == 3e9
+
+
+def test_partition_rate_lowers_partition_heavy_costs():
+    """A faster partition rate must cut exactly the partition term: rams,
+    rquick and ssort get cheaper; gatherm (no partition work) is
+    unchanged."""
+    base = CostModel(name="b", local_rate=2e9)
+    fast = CostModel(name="f", local_rate=2e9, partition_rate=1e12)
+    n, p = 2**24, 256
+    for fn in (selection.cost_rams, selection.cost_rquick,
+               selection.cost_ssort):
+        assert fn(n, p, model=fast) < fn(n, p, model=base)
+    assert selection.cost_gatherm(n, p, model=fast) == \
+        selection.cost_gatherm(n, p, model=base)
+    # nested-mesh rams pays the same split
+    assert selection.cost_rams(n, p, model=fast, mesh_shape=(32, 8)) < \
+        selection.cost_rams(n, p, model=base, mesh_shape=(32, 8))
+
+
 def test_default_profile_matches_priors():
     m = selection.DEFAULT_MODEL
     assert m.alpha == 2.0e-6 and m.alpha_c == 5.0e-6
