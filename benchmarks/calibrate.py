@@ -360,6 +360,8 @@ def measure_profile(ps, name: str) -> CostModel:
                       1e-3 * prior.alpha_c)
     local_rate = bench_local_sort_rate(pmax)
     partition_rate = bench_partition_rate(pmax)
+    io_beta = bench_io_rate()
+    overlap = measure_overlap()
     # kernel variants run in interpret mode off-TPU: one small shard each,
     # recorded for the bench trajectory (not used as profile constants)
     sort_kernel_rate = bench_local_sort_rate(1, m=1 << 11, kernel=True)
@@ -371,6 +373,7 @@ def measure_profile(ps, name: str) -> CostModel:
         local_rate=float(local_rate),
         partition_rate=float(partition_rate),
         slot_overhead=prior.slot_overhead,
+        io_beta=float(io_beta), overlap=float(overlap),
         meta={
             "microbench": {
                 "method": "primitive microbenchmarks (arXiv 1410.6754 style)",
@@ -381,6 +384,8 @@ def measure_profile(ps, name: str) -> CostModel:
                 "local_sort_kernel_words_s": float(sort_kernel_rate),
                 "partition_words_s": float(partition_rate),
                 "partition_kernel_words_s": float(partition_kernel_rate),
+                "io_s_word": float(io_beta),
+                "overlap_fraction": float(overlap),
                 "host": platform.node(),
                 "backend": "sim",
             },
@@ -499,6 +504,115 @@ def run_local_bench(pmax: int):
         rows.append({"p": pmax, "e": int(math.log2(m)),
                      "algorithm": label, "us": us})
         emit(f"calibrate/{label}", us, f"m=2^{int(math.log2(m))}")
+    return rows
+
+
+def bench_io_rate(m: int = 1 << 18, iters: int = 5) -> float:
+    """Host↔device streaming seconds per 32-bit word (``CostModel.io_beta``):
+    a device_put + device_get round-trip of an m-word buffer, halved.  On
+    the CPU sim backend this is a memcpy pair — the measurement matters on
+    accelerators, where it is the external lane's PCIe term."""
+    x = np.zeros(m, np.int32)
+    ts = []
+    jax.block_until_ready(jax.device_put(x))          # warm the path
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        np.asarray(jax.block_until_ready(jax.device_put(x)))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) / (2 * m)
+
+
+def _form_runs_seconds(m: int, budget: int, double_buffer: bool) -> float:
+    from repro.core import external as ext
+    r = np.random.default_rng(0)
+    keys = r.integers(0, 2**32, size=m, dtype=np.int64).astype(np.uint32)
+    idx = np.arange(m, dtype=np.uint32)
+    ext.form_runs(keys, idx, budget=budget,
+                  double_buffer=double_buffer)        # compile + warm
+    t0 = time.perf_counter()
+    ext.form_runs(keys, idx, budget=budget, double_buffer=double_buffer)
+    return time.perf_counter() - t0
+
+
+def measure_overlap(m: int = 1 << 16, budget: int = 1 << 13) -> float:
+    """``CostModel.overlap``: the fraction of run-formation wall-clock the
+    double-buffered copies hide, measured as 1 - t(db)/t(serial), clamped
+    to [0, 1).  ~0 on the synchronous CPU sim backend; meaningful where
+    device_put is truly async."""
+    t_serial = _form_runs_seconds(m, budget, double_buffer=False)
+    t_db = _form_runs_seconds(m, budget, double_buffer=True)
+    return float(min(0.99, max(0.0, 1.0 - t_db / max(t_serial, 1e-12))))
+
+
+def run_external_bench(pmax: int):
+    """External-lane wall-clock cells for the CI trajectory gate, in the
+    ``run_local_bench`` shape (no counted-trace features — they join the
+    JSON's ``bench`` mapping only):
+
+      * ``external/run_formation`` — pass A, 2^14 words through a 2^11
+        budget (8 double-buffered device round-trips);
+      * ``external/kway_merge`` — pass D, classifier engine over the 8
+        formed runs;
+      * ``external/e2e`` — the full four-pass ``psort(external=...)`` at
+        p = 8, n/p = 2^8, budget 2^6 (4 runs/PE).
+    """
+    from repro.core import external as ext
+    from repro.core.external import ExternalPolicy
+    rows = []
+    m, budget = 1 << 14, 1 << 11
+    r = np.random.default_rng(0)
+    keys = r.integers(0, 2**32, size=m, dtype=np.int64).astype(np.uint32)
+    idx = np.arange(m, dtype=np.uint32)
+
+    us = timeit(lambda: ext.form_runs(keys, idx, budget=budget),
+                warmup=1, iters=2)
+    rows.append({"p": pmax, "e": int(math.log2(m)),
+                 "algorithm": "external/run_formation", "us": us})
+    emit("calibrate/external/run_formation", us,
+         f"m=2^{int(math.log2(m))} budget=2^{int(math.log2(budget))}")
+
+    runs = ext.form_runs(keys, idx, budget=budget)
+    us = timeit(lambda: ext.merge_runs(runs, budget=budget),
+                warmup=1, iters=2)
+    rows.append({"p": pmax, "e": int(math.log2(m)),
+                 "algorithm": "external/kway_merge", "us": us})
+    emit("calibrate/external/kway_merge", us, f"runs={len(runs)}")
+
+    p, e = 8, 8
+    n = p << e
+    x = generate_instance("Uniform", p, n, seed=11).astype(np.int32)
+    pol = ExternalPolicy(budget=1 << 6)
+    us = timeit(lambda: np.asarray(
+        psort(x, p=p, backend="sim", external=pol)), warmup=1, iters=2)
+    rows.append({"p": pmax, "e": e, "algorithm": "external/e2e", "us": us})
+    emit("calibrate/external/e2e", us,
+         f"p={p} n/p=2^{e} budget=2^6 runs=4")
+    return rows
+
+
+EXTERNAL_GRID = ((256, 4, 16), (256, 4, 32), (1024, 8, 32), (1024, 8, 64))
+
+
+def external_rows():
+    """The "External memory" grid: per-pass counted traces of the
+    out-of-core lane (``trace_collectives(external=...)`` — seeded input,
+    trace-time counts, no wall-clock, so ``tools/check_docs.py`` can diff
+    the regenerated file).  The point of the grid: wire volume is paid
+    once per run pass (R slotted all_to_alls) while the host↔device
+    stream (io bytes) covers every element twice — run formation and
+    merge — independent of R."""
+    from repro.core.external import ExternalPolicy
+    rows = []
+    for n, p, budget in EXTERNAL_GRID:
+        tr = trace_collectives(n, p, external=ExternalPolicy(budget=budget))
+        per = -(-n // p)
+        runs = -(-per // budget)
+        passes = sum(1 for t in tr.tags() if t.startswith("ext:pass"))
+        a2a = tr.filter(primitive="all_to_all")
+        rows.append((n, p, budget, runs, passes, a2a.counts()["all_to_all"],
+                     tr.wire_bytes(), tr.io_bytes(),
+                     tr.filter(tag="ext:runs").io_bytes(),
+                     tr.filter(tag="ext:merge").io_bytes()))
     return rows
 
 
@@ -637,6 +751,29 @@ def write_experiments(path: str, model: CostModel):
 
     lines += [
         "",
+        "## External memory (out-of-core)",
+        "",
+        "`psort(external=ExternalPolicy(budget=...))` streams shards larger",
+        "than the device budget through run formation + k-way merge",
+        "(docs/ARCHITECTURE.md \"External memory\").  Cells are per-pass",
+        "counted traces (`trace_collectives(n, p, external=...)`, seeded",
+        "deterministic input): R = ceil(n/p / budget) slotted all_to_all",
+        "passes carry the wire volume, while the host↔device stream (the",
+        "`ext:h2d`/`ext:d2h` pseudo-events, `CommTrace.io_bytes()`) covers",
+        "every element once in each direction per streaming pass —",
+        "run formation and merge — independent of R.",
+        "",
+        "| n | p | budget | runs/PE | a2a passes | a2a launches/PE "
+        "| wire bytes/PE | io bytes | io: runs | io: merge |",
+        "|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|",
+    ]
+    for (n, p, budget, runs, passes, a2a, wire, io_b, io_r,
+         io_m) in external_rows():
+        lines.append(f"| {n} | {p} | {budget} | {runs} | {passes} | {a2a} "
+                     f"| {wire} | {io_b} | {io_r} | {io_m} |")
+
+    lines += [
+        "",
         "## `profiles/*.json` schema",
         "",
         "A profile is one serialized `repro.core.selection.CostModel`",
@@ -664,6 +801,10 @@ def write_experiments(path: str, model: CostModel):
         "launch; intra levels pay no `alpha_hop` fill |",
         "| `beta_inner` | float s/word / null | intra-axis per-word cost "
         "(`--nested` two-tier fit) |",
+        "| `io_beta` | float s/word / null | host↔device streaming cost of "
+        "the external lane (null = PCIe-class prior via `io_b`) |",
+        "| `overlap` | float | fraction of host↔device traffic hidden by "
+        "the double-buffered copies (0 = exposed, 1 = hidden) |",
         "| `meta` | object | free-form provenance — `microbench` (the "
         "primitive measurements the constants came from), `sweep_fit` "
         "(whole-program NNLS diagnostic: `r2`, `theta`, `features`, "
@@ -738,6 +879,7 @@ def main(argv=None):
                                   exps=tuple(EXPS_FAST) if args.fast
                                   else (0, 2, 4))
     local_cells = run_local_bench(max(args.p))
+    local_cells += run_external_bench(max(args.p))
     # whole-program regression over the sweep — diagnostic only (see
     # module docstring); kept in meta so the two views can be compared
     sweep_fit = fit_profile(cells, machine)
@@ -784,7 +926,9 @@ def main(argv=None):
                         "partition_rate": model.partition_rate,
                         "alpha_inner": model.alpha_inner,
                         "alpha_c_inner": model.alpha_c_inner,
-                        "beta_inner": model.beta_inner},
+                        "beta_inner": model.beta_inner,
+                        "io_beta": model.io_beta,
+                        "overlap": model.overlap},
             "sweep_fit": model.meta["sweep_fit"],
             "crossovers": crossings,
             "bench": bench,

@@ -32,6 +32,7 @@ it is emulated via ``comm.sim_map(..., mesh=(d, p))``.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Dict, Optional
 
@@ -220,7 +221,7 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
           capacity_factor: float = 2.0, return_info: bool = False,
           backend: str = "shard_map",
           cost_model: Optional[selection.CostModel] = None,
-          fault_policy=None, **algo_kw):
+          fault_policy=None, external=None, **algo_kw):
     """Sort a host array over the ``axis`` mesh axis with p (emulated) PEs.
 
     Returns the sorted array (and an info dict with overflow / balance when
@@ -277,6 +278,21 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     the info dict gains ``"fault"`` and ``"comm_trace"`` entries.  See
     ``docs/ARCHITECTURE.md`` ("Fault tolerance").
 
+    **External memory** — ``external`` (a
+    :class:`repro.core.external.ExternalPolicy`, sim backend, 1-D flat
+    axis only) lifts the device-memory cap on n/p: shards larger than
+    ``external.budget`` elements live in host memory and stream through
+    the device in run-formation / splitter-fit / per-run-exchange /
+    k-way-merge passes (see ``repro/core/external.py``).  The output is
+    bitwise-equal to the in-core path — it is *the* globally sorted
+    array.  ``algorithm="auto"`` consults the cost model's external
+    regime (``select_algorithm(..., budget=...)``); shards that fit the
+    budget run the normal in-core path.  The ``REPRO_EXTERNAL_BUDGET``
+    environment variable applies a default policy when ``external`` is
+    omitted.  Composes with ``fault_policy``: a kill during any external
+    pass excludes the PE and re-runs the whole multi-pass pipeline at the
+    reduced topology.
+
     >>> import numpy as np
     >>> from repro.core.api import psort
     >>> x = np.array([5, 3, 1, 4, 2, 9, 8, 6], np.int32)
@@ -312,6 +328,16 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     [4, 2]
     >>> [e.primitive for e in pol.trace.injected()]
     ['fault:kill', 'rescale']
+
+    A shard budget of 4 elements streams the 16-element-per-PE problem
+    through the device in 4 runs per PE — same sorted output:
+
+    >>> from repro.core.external import ExternalPolicy
+    >>> big = np.arange(64, dtype=np.int32)[::-1].copy()
+    >>> out = psort(big, p=4, backend="sim",
+    ...             external=ExternalPolicy(budget=4))
+    >>> np.array_equal(np.asarray(out), np.sort(big))
+    True
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
@@ -374,6 +400,21 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     orig_dtype = keys.dtype
     u = key_to_uint(keys)
 
+    external = _resolve_external(external, backend)
+    if external is not None:
+        if backend != "sim":
+            raise ValueError("external= requires backend='sim' (host-"
+                             "streamed shards run on emulated PEs)")
+        if batched:
+            raise ValueError("external= supports 1-D keys only (each run "
+                             "pass is one global sort problem)")
+        if mesh_shape is not None:
+            raise ValueError("external= runs on one flat axis; drop "
+                             "mesh_shape")
+    elif algorithm == "external":
+        raise ValueError("algorithm='external' needs external="
+                         "ExternalPolicy(...) (or REPRO_EXTERNAL_BUDGET)")
+
     if fault_policy is not None:
         if backend != "sim":
             raise ValueError("fault_policy= requires backend='sim' (the "
@@ -384,14 +425,18 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
             mesh_shape=(p_o, p_i) if mesh_shape is not None else None,
             mesh_axes=mesh_axes, levels=levels,
             capacity_factor=capacity_factor, return_info=return_info,
-            cost_model=cost_model, algo_kw=algo_kw)
+            cost_model=cost_model, algo_kw=algo_kw, external=external)
 
     per = -(-max(n, 1) // p)                       # ceil(n/p)
     capacity = max(4, int(np.ceil(per * capacity_factor)))
     if algorithm == "auto":
-        algorithm = selection.select_algorithm(n, p, model=cost_model,
-                                               levels=levels,
-                                               mesh_shape=mesh_shape)
+        algorithm = selection.select_algorithm(
+            n, p, model=cost_model, levels=levels, mesh_shape=mesh_shape,
+            budget=external.budget if external is not None else None)
+    if external is not None and (algorithm == "external"
+                                 or per > external.budget):
+        return _psort_external(u, n, orig_dtype, p=p, axis=axis,
+                               policy=external, return_info=return_info)
     if algorithm in ("rams", "ntb-ams"):
         if mesh_shape is not None:
             from .rams import nested_level_bits
@@ -490,6 +535,53 @@ def _out_capacity(algorithm: str, n: int, p: int, per: int, capacity: int) -> in
     return capacity
 
 
+def _resolve_external(external, backend: str):
+    """Explicit policy wins; else ``REPRO_EXTERNAL_BUDGET`` (sim only)."""
+    if external is not None:
+        return external
+    env = os.environ.get("REPRO_EXTERNAL_BUDGET")
+    if env and backend == "sim":
+        from .external import ExternalPolicy
+        return ExternalPolicy(budget=int(env))
+    return None
+
+
+def _psort_external(u, n, orig_dtype, *, p, axis, policy, return_info):
+    """The non-fault ``psort(..., external=...)`` tail: run the four
+    external passes once and reassemble the host output exactly like the
+    in-core paths.  Ambient collectives decorators (``comm.counting()``)
+    apply — the passes resolve ``impl`` per ``sim_map`` call."""
+    from .external import _psort_external_once
+    keys_out, idx_out, counts_out, overflow = _psort_external_once(
+        u, n, axis=axis, p=p, policy=policy, impl=None)
+    rows = np.concatenate([keys_out[0, pe, :counts_out[0, pe]]
+                           for pe in range(p)])
+    result = uint_to_key(jnp.asarray(rows), orig_dtype)
+    if return_info:
+        per = -(-max(n, 1) // p)
+        perm = (np.concatenate([idx_out[0, pe, :counts_out[0, pe]]
+                                for pe in range(p)]) if n
+                else np.zeros((0,), np.uint32))
+        info = {
+            "algorithm": "external",
+            "backend": "sim",
+            "mesh_shape": None,
+            "counts": counts_out[0],
+            "overflow": int(np.asarray(overflow).sum()),
+            "balance": counts_out.max() / max(1.0, n / p),
+            "perm": perm,
+            "n": n,
+            "d": 1,
+            "external": {
+                "budget": policy.budget,
+                "runs": max(1, -(-per // policy.budget)),
+                "merge": policy.merge,
+            },
+        }
+        return result, info
+    return result
+
+
 def _psort_sim_once(u, n, d, batched, *, axis, data_axis, p, mesh_shape,
                     mesh_axes, algorithm, capacity_factor, levels, algo_kw,
                     impl):
@@ -548,7 +640,8 @@ def _psort_sim_once(u, n, d, batched, *, axis, data_axis, p, mesh_shape,
 
 def _psort_faulty(u, n, d, batched, orig_dtype, *, p, algorithm, policy,
                   axis, data_axis, mesh_shape, mesh_axes, levels,
-                  capacity_factor, return_info, cost_model, algo_kw):
+                  capacity_factor, return_info, cost_model, algo_kw,
+                  external=None):
     """The ``psort(..., fault_policy=...)`` driver (sim backend).
 
     Attempt loop (bounded by ``repro.runtime.failures.run_with_restarts``):
@@ -576,21 +669,35 @@ def _psort_faulty(u, n, d, batched, orig_dtype, *, p, algorithm, policy,
 
     def attempt(_start):
         p_cur, ms = state["p"], state["mesh_shape"]
+        per_cur = -(-max(n, 1) // p_cur)
         algo = algorithm
         if algo == "auto":
-            algo = selection.select_algorithm(n, p_cur, model=cost_model,
-                                              levels=levels, mesh_shape=ms)
+            algo = selection.select_algorithm(
+                n, p_cur, model=cost_model, levels=levels, mesh_shape=ms,
+                budget=external.budget if external is not None else None)
+        # external engages whenever the per-PE shard outgrows the budget —
+        # a rescale shrinks p, so an attempt that started in-core can go
+        # external after exclusion (and never the other way around)
+        ext = external is not None and (algo == "external"
+                                        or per_cur > external.budget)
+        if ext:
+            algo = "external"
         rec = {"p": p_cur, "mesh_shape": ms, "algorithm": algo, "ok": False}
         policy.attempts.append(rec)
         # faulty outside counting: a killed launch records its fault:kill
         # event but not the launch the dead PE never completed
         fc = comm.FaultyCollectives(
             comm.CountingCollectives(comm.SIM, trace), state["plan"], trace)
-        out = _psort_sim_once(
-            u, n, d, batched, axis=axis, data_axis=data_axis, p=p_cur,
-            mesh_shape=ms, mesh_axes=mesh_axes, algorithm=algo,
-            capacity_factor=capacity_factor, levels=levels,
-            algo_kw=algo_kw, impl=fc)
+        if ext:
+            from .external import _psort_external_once
+            out = _psort_external_once(u, n, axis=axis, p=p_cur,
+                                       policy=external, impl=fc)
+        else:
+            out = _psort_sim_once(
+                u, n, d, batched, axis=axis, data_axis=data_axis, p=p_cur,
+                mesh_shape=ms, mesh_axes=mesh_axes, algorithm=algo,
+                capacity_factor=capacity_factor, levels=levels,
+                algo_kw=algo_kw, impl=fc)
         times = [policy.base_step_time * fc.fired_delays.get(pe, 1.0)
                  for pe in range(p_cur)]
         slow = flag_stragglers(times, k_mad=policy.k_mad,
@@ -653,7 +760,7 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
                       capacity_factor: float = 2.0, d: int = 1,
                       mesh_shape: Optional[tuple] = None,
                       mesh_axes: tuple = ("inter", "intra"),
-                      levels: Optional[int] = None,
+                      levels: Optional[int] = None, external=None,
                       **algo_kw) -> comm.CommTrace:
     """Count the collectives one ``psort`` call would launch, per PE.
 
@@ -694,7 +801,36 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
     >>> [tag for tag, s in sorted(t.by_tag().items())
     ...  if "all_to_all" in s["counts"]]
     ['level0', 'level1', 'shuffle']
+
+    ``external=ExternalPolicy(...)`` traces the out-of-core lane instead.
+    Unlike the in-core trace this *executes* (splitter values steer the
+    pass structure, so shapes alone don't determine the trace) on a
+    deterministic seeded input — the trace is reproducible and additionally
+    carries the injected ``ext:h2d``/``ext:d2h`` I/O pseudo-events
+    (:meth:`repro.core.comm.CommTrace.io_bytes`) with per-pass tags:
+
+    >>> from repro.core.external import ExternalPolicy
+    >>> t = trace_collectives(256, 4, external=ExternalPolicy(budget=16))
+    >>> sorted(tag for tag in t.tags() if tag.startswith("ext:pass"))
+    ['ext:pass0', 'ext:pass1', 'ext:pass2', 'ext:pass3']
+    >>> t.io_bytes() > 0 and t.io_bytes() == t.filter(tag="ext:runs"
+    ...     ).io_bytes() + t.filter(tag="ext:merge").io_bytes()
+    True
     """
+    if external is not None:
+        if d > 1 or mesh_shape is not None:
+            raise ValueError("external tracing covers the 1-D flat axis "
+                             "only (the external lane's contract)")
+        if p is None or p & (p - 1):
+            raise ValueError(f"p={p} must be a power of two")
+        from .external import _psort_external_once
+        rng = np.random.default_rng(0xE87)
+        u = jnp.asarray(rng.integers(0, 2 ** 32, size=max(n, 1),
+                                     dtype=np.int64).astype(np.uint32))
+        counter = comm.CountingCollectives(comm.SIM)
+        _psort_external_once(u, n, axis="sort", p=p, policy=external,
+                             impl=counter)
+        return counter.trace
     axes = None
     if mesh_shape is not None:
         p_o, p_i = (int(v) for v in mesh_shape)

@@ -246,8 +246,22 @@ class CommTrace:
                          if e.primitive in self.PRIMITIVES
                          and e.primitive != "ppermute"))
 
+    IO_PRIMITIVES = ("ext:h2d", "ext:d2h")
+
     def wire_bytes(self) -> int:
-        return sum(e.bytes for e in self.events)
+        # injected events (fault records, external-lane I/O) never count
+        # toward the on-wire volume the cost model's beta is fitted from
+        return sum(e.bytes for e in self.events
+                   if e.primitive in self.PRIMITIVES)
+
+    def io_bytes(self) -> int:
+        """Host↔device streaming volume of the external lane — the
+        ``ext:h2d`` / ``ext:d2h`` pseudo-events the out-of-core driver
+        injects around its copies (they are not collectives, so they stay
+        out of :attr:`launches` / :meth:`wire_bytes`; the ``io_beta`` cost
+        term is fitted against this aggregate)."""
+        return sum(e.bytes for e in self.events
+                   if e.primitive in self.IO_PRIMITIVES)
 
     # -- axis / phase attribution ----------------------------------------
 

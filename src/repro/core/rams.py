@@ -122,6 +122,20 @@ def _composite(keys_u32, pe, pos, valid):
     return jnp.where(valid, c, _HI64)
 
 
+def quantile_splitters(sorted_samples, nb: int, invalid=_HI64):
+    """``nb - 1`` evenly spaced order statistics of the valid prefix.
+
+    The shared splitter pick of RAMS, samplesort, and the external lane:
+    ``sorted_samples`` is an ascending u64 composite array whose invalid
+    entries equal ``invalid`` (and therefore sort to the tail); the i-th
+    splitter is the element at rank ``i * n_valid // nb``.  Extracted so
+    the three callers stay bitwise-identical.
+    """
+    n_valid = jnp.sum(sorted_samples != invalid)
+    q = (jnp.arange(1, nb, dtype=jnp.int64) * n_valid) // nb
+    return sorted_samples[jnp.clip(q, 0, sorted_samples.shape[0] - 1)]
+
+
 def rams(shard: SortShard, axis_name: str, p: int, *,
          seed: int = 0xA35, levels: Optional[int] = None,
          level_bits: Optional[Sequence[int]] = None,
@@ -228,11 +242,9 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
     all_samp = comm.all_gather(samp, axis_name, axis_index_groups=groups,
                                tiled=True)
     all_samp = jnp.sort(all_samp)
-    n_valid = jnp.sum(all_samp != _HI64)
 
     # --- 3. select splitters, classify -------------------------------------
-    q = (jnp.arange(1, nb, dtype=jnp.int64) * n_valid) // nb
-    splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]   # (nb-1,)
+    splitters = quantile_splitters(all_samp, nb)                  # (nb-1,)
     # fused SSSS classify + histogram + stable in-bucket rank.  Element
     # composites never materialize as u64: the (key, tag) planes compare
     # lexicographically, which equals the u64 compare since the tag is

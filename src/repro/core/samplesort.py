@@ -21,6 +21,7 @@ import numpy as np
 
 from . import comm
 from .hypercube import _alltoall_route, alltoall_shuffle
+from .rams import quantile_splitters
 from .types import SortShard, local_sort, resize
 from repro.kernels.partition import partition_buckets
 
@@ -65,9 +66,7 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
         samp = shard.keys[pos].astype(jnp.uint64)
         samp = jnp.where((pos < shard.count), samp, _HI64)
         all_samp = jnp.sort(comm.all_gather(samp, axis_name, tiled=True))
-        n_valid = jnp.sum(all_samp != _HI64)
-        q = (jnp.arange(1, p, dtype=jnp.int64) * n_valid) // p
-        splitters = all_samp[jnp.clip(q, 0, all_samp.shape[0] - 1)]
+        splitters = quantile_splitters(all_samp, p)
 
     # fused SSSS classify (#splitters ≤ key): the u64 splitters and the
     # zero-extended keys compare as (hi, lo) u32 planes lexicographically;

@@ -52,6 +52,13 @@ class CostModel:
                  the fused partition kernel → the ``part_rate`` property
                  falls back to ``local_rate``;
     slot_overhead — static slot provisioning factor of the a2a exchanges;
+    io_beta    — seconds per 32-bit word across the host↔device link
+                 (the external lane's streaming cost); ``None`` in profiles
+                 that predate the external regime → the ``io_b`` property
+                 falls back to a PCIe-class prior;
+    overlap    — fraction of the host↔device traffic hidden behind compute
+                 by the double-buffered copies (0 = fully exposed,
+                 1 = fully hidden);
     meta       — free-form fit diagnostics (R², sweep grid, host, …).
 
     On a **hierarchical mesh** (inter-host × intra-host, see
@@ -75,6 +82,8 @@ class CostModel:
     alpha_inner: Optional[float] = None      # intra-axis p2p step
     alpha_c_inner: Optional[float] = None    # intra-axis fused launch
     beta_inner: Optional[float] = None       # intra-axis s/word
+    io_beta: Optional[float] = None          # host↔device s/word
+    overlap: float = 0.0                     # copy/compute overlap fraction
     meta: Dict = dataclasses.field(default_factory=dict, compare=False)
 
     # -- derived ----------------------------------------------------------
@@ -105,6 +114,11 @@ class CostModel:
     def part_rate(self) -> float:
         return self.local_rate if self.partition_rate is None \
             else self.partition_rate
+
+    @property
+    def io_b(self) -> float:
+        """Host↔device seconds per word; PCIe-class prior when unmeasured."""
+        return BYTES_PER_WORD / 16e9 if self.io_beta is None else self.io_beta
 
     # -- JSON round-trip --------------------------------------------------
 
@@ -247,6 +261,32 @@ def cost_ssort(n, p, model: CostModel = DEFAULT_MODEL):
             + p / m.part_rate)                  # p-way splitter scan
 
 
+def cost_external(n, p, budget, model: CostModel = DEFAULT_MODEL):
+    """Two-pass out-of-core sort of n/p words through a ``budget``-word
+    device window (arXiv 0910.2582's pass structure on one device each):
+
+      * every element crosses the host↔device link ~3× per pass (in, out,
+        and once more through the merge's chunk staging) — 6·n/p words of
+        streaming traffic, discounted by the measured ``overlap`` the
+        double-buffered copies achieve (cf. arXiv 1410.6754);
+      * R run-formation launches plus the splitter fit and the merge
+        barrier cost one fused collective each;
+      * one all-to-all per pass moves the slot-provisioned run slices;
+      * the device sorts each window twice (runs, then merged chunks) and
+        classifies every element against p splitters per pass.
+    """
+    m = model
+    npp = max(1.0, n / p)
+    budget = max(1, budget)
+    runs = max(1.0, math.ceil(npp / budget))
+    io = 6 * npp * m.io_b * (1.0 - min(1.0, max(0.0, m.overlap)))
+    coll = (runs + 2) * m.coll(p)
+    wire = m.beta * npp * m.slot_overhead
+    local = 2 * npp * _lg(min(npp, budget)) / m.local_rate
+    classify = 2 * npp * _lg(p) / m.part_rate
+    return io + coll + wire + local + classify
+
+
 COSTS = {
     "gatherm": cost_gatherm,
     "rfis": cost_rfis,
@@ -258,7 +298,7 @@ COSTS = {
 def select_algorithm(n: int, p: int,
                      model: Optional[CostModel] = None,
                      levels: Optional[int] = None,
-                     mesh_shape=None) -> str:
+                     mesh_shape=None, budget: Optional[int] = None) -> str:
     """The paper's four-regime selection: argmin of the model costs.
 
     GatherM's output lives on one PE (no balance guarantee) → only
@@ -274,8 +314,16 @@ def select_algorithm(n: int, p: int,
     exclude-and-rescale: shrinking p moves the (n, p) point across the
     regime map, and a sort that started as e.g. RAMS at large p may
     legitimately restart as RQuick at the reduced extent.
+
+    ``budget`` (device words per PE) adds the fifth, external regime: when
+    the shard no longer fits on the device the in-core candidates are not
+    runnable at all, so any n/p above the budget selects "external"; below
+    it the budget only matters through the crossover the cost model already
+    encodes (streaming traffic vs. in-core wire volume).
     """
     m = model if model is not None else DEFAULT_MODEL
+    if budget is not None and n / p > budget:
+        return "external"
     cands = dict(COSTS)
     if n > max(8, p // 8):
         cands.pop("gatherm")
@@ -293,13 +341,15 @@ def select_algorithm(n: int, p: int,
 
 def regime_table(p: int, exponents=range(-8, 24),
                  model: Optional[CostModel] = None,
-                 levels: Optional[int] = None, mesh_shape=None):
+                 levels: Optional[int] = None, mesh_shape=None,
+                 budget: Optional[int] = None):
     """n/p sweep → selected algorithm; used by tests and EXPERIMENTS.md.
-    ``levels`` / ``mesh_shape`` forward to the RAMS cost exactly as
-    :func:`select_algorithm` does."""
+    ``levels`` / ``mesh_shape`` / ``budget`` forward to the costs exactly
+    as :func:`select_algorithm` does."""
     rows = []
     for e in exponents:
         n = max(1, int(p * (2.0 ** e)))
         rows.append((e, n, select_algorithm(n, p, model=model, levels=levels,
-                                            mesh_shape=mesh_shape)))
+                                            mesh_shape=mesh_shape,
+                                            budget=budget)))
     return rows

@@ -29,7 +29,13 @@ def kway_classify(keys, ties, s_keys, s_ties, *, n_buckets: int,
     bucket, hist = kway.kway_classify(keys, ties, s_keys, s_ties,
                                       n_buckets=n_buckets, interpret=interpret)
     if pad:
-        # padded entries land in the last bucket; remove them from the hist
+        # Padded entries are all-ones (key, tie) pairs: every splitter
+        # compares <= them, so they land in bucket len(s_keys) — the last
+        # bucket only when the caller supplies exactly n_buckets-1
+        # splitters.  Subtract them where they actually landed, and clamp:
+        # real all-ones elements share that bucket, and the count must
+        # never go negative when pad >= the bucket's true population.
         bucket = bucket[:C]
-        hist = hist.at[n_buckets - 1].add(-pad)
+        hist = hist.at[min(s_keys.shape[0], n_buckets - 1)].add(-pad)
+        hist = jnp.maximum(hist, 0)
     return bucket, hist

@@ -1,0 +1,441 @@
+"""External-memory psort: the out-of-core lane vs the in-core algorithms.
+
+The differential contract (ISSUE 8): ``psort(..., external=...)`` on a
+shard larger than the device budget must produce output **bitwise equal**
+to the in-core path — the final key array is *the* globally sorted array,
+independent of the (key, tie) schedule the external lane sorts by — for
+every algorithm × distribution cell, with the exact multiset preserved
+through run formation, the per-run exchanges, and the k-way merge.
+
+Lanes follow the test_differential pattern: the fast slice runs the core
+instance set (duplicate-heavy + skewed) at p = 8 with 2–8 runs per PE;
+the full 7-algorithm × 11-distribution matrix is ``slow`` and runs
+nightly.  Unit/property sections cover the pass primitives directly:
+run-formation round-trips, merge ≡ sorted concatenation (both engines),
+the sketch-provisioned run-slice capacity invariant, and the kway
+pad-accounting regression.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ExternalPolicy, psort, select_algorithm
+from repro.core.api import trace_collectives
+from repro.core import external as ext
+from repro.core.selection import CostModel, cost_external, regime_table
+from repro.data.distributions import INSTANCES, generate_instance
+
+from helpers import check_sort
+
+ALGOS = ["gatherm", "allgatherm", "rfis", "rquick", "rams", "bitonic",
+         "ssort"]
+ALL_INSTANCES = sorted(INSTANCES)
+CORE_INSTANCES = ["Uniform", "Zero", "g-Group", "Staggered"]
+# classical sample sort's duplicate-key overflow is a property of the
+# algorithm, not of the external lane — same exclusions as the in-core
+# differential matrix
+SSORT_SKIP = {"Zero", "DeterDupl", "RandDupl", "Mirrored"}
+
+P = 8
+
+
+def _cells():
+    for algorithm in ALGOS:
+        for instance in ALL_INSTANCES:
+            if algorithm == "ssort" and instance in SSORT_SKIP:
+                continue
+            marks = [] if instance in CORE_INSTANCES else [pytest.mark.slow]
+            yield pytest.param(algorithm, instance, marks=marks,
+                               id=f"{algorithm}-{instance}")
+
+
+@pytest.mark.parametrize("algorithm,instance", _cells())
+def test_external_matches_incore_bitwise(algorithm, instance):
+    """external output == in-core output == np.sort, bitwise, at ~5 runs
+    per PE (per = 37, budget = 8)."""
+    x = generate_instance(instance, P, 37 * P).astype(np.int32)
+    out_ic = np.asarray(psort(x, p=P, algorithm=algorithm, backend="sim"))
+    out_ex, info = psort(x, p=P, backend="sim",
+                         external=ExternalPolicy(budget=8),
+                         return_info=True)
+    out_ex = np.asarray(out_ex)
+    assert info["algorithm"] == "external"
+    assert info["overflow"] == 0
+    assert (out_ex == out_ic).all()
+    assert (out_ex == np.sort(x)).all()
+    # exact multiset: the carried idx payload is a permutation
+    assert len(np.unique(info["perm"])) == len(x)
+
+
+@pytest.mark.parametrize("runs", [2, 3, 5, 8])
+def test_external_run_count_sweep(runs):
+    """2–8 runs per PE, same answer every time (per = 40)."""
+    x = generate_instance("Staggered", P, 40 * P).astype(np.int32)
+    budget = -(-40 // runs)
+    out, info = psort(x, p=P, backend="sim",
+                      external=ExternalPolicy(budget=budget),
+                      return_info=True)
+    assert info["external"]["runs"] == runs
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_external_wide_key_path():
+    """u64 keys (int64 beyond the u32 range) take the plane/lexsort path."""
+    rng = np.random.default_rng(7)
+    x = rng.integers(-2**62, 2**62, size=200, dtype=np.int64)
+    out = psort(x, p=4, backend="sim", external=ExternalPolicy(budget=8))
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_external_losertree_engine_matches_classifier():
+    x = generate_instance("g-Group", P, 37 * P).astype(np.int32)
+    a = np.asarray(psort(x, p=P, backend="sim",
+                         external=ExternalPolicy(budget=8)))
+    b = np.asarray(psort(x, p=P, backend="sim",
+                         external=ExternalPolicy(budget=8,
+                                                 merge="losertree")))
+    assert (a == b).all() and (a == np.sort(x)).all()
+
+
+def test_external_deterministic():
+    x = generate_instance("RandDupl", P, 37 * P).astype(np.int32)
+    pol = ExternalPolicy(budget=8)
+    a = np.asarray(psort(x, p=P, backend="sim", external=pol))
+    b = np.asarray(psort(x, p=P, backend="sim", external=pol))
+    assert (a == b).all()
+
+
+@pytest.mark.parametrize("n", [0, 1, 7, 37])
+def test_external_degenerate_sizes(n):
+    """n < p, n < budget, empty input."""
+    x = np.arange(n, dtype=np.int32)[::-1].copy()
+    out = psort(x, p=4, backend="sim",
+                external=ExternalPolicy(budget=4, slot_factor=2.0))
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_external_8x_budget_acceptance():
+    """Acceptance: n/p >= 8× the device budget sorts correctly."""
+    p = 4
+    x = generate_instance("Uniform", p, 128 * p).astype(np.int32)
+    out, info = psort(x, p=p, backend="sim",
+                      external=ExternalPolicy(budget=16), return_info=True)
+    assert info["external"]["runs"] == 8
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_external_env_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_EXTERNAL_BUDGET", "8")
+    x = generate_instance("Uniform", 4, 32 * 4).astype(np.int32)
+    out, info = psort(x, p=4, backend="sim", return_info=True)
+    assert info["algorithm"] == "external"
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_external_policy_validation():
+    with pytest.raises(ValueError, match="budget"):
+        ExternalPolicy(budget=0)
+    with pytest.raises(ValueError, match="merge"):
+        ExternalPolicy(budget=4, merge="heapsort")
+    with pytest.raises(ValueError, match="sketch_per_run"):
+        ExternalPolicy(budget=4, sketch_per_run=0)
+    with pytest.raises(ValueError, match="sim"):
+        psort(np.arange(8, dtype=np.int32), p=2, backend="shard_map",
+              external=ExternalPolicy(budget=2))
+    with pytest.raises(ValueError, match="external"):
+        psort(np.arange(8, dtype=np.int32), p=2, backend="sim",
+              algorithm="external")
+
+
+# ---------------------------------------------------------------------------
+# CommTrace: per-pass phase attribution and io accounting
+# ---------------------------------------------------------------------------
+
+
+def test_trace_per_pass_attribution():
+    t = trace_collectives(256, 4, external=ExternalPolicy(budget=16))
+    tags = set(t.tags())
+    assert {"ext:splitters", "ext:pass0", "ext:pass3", "ext:merge"} <= tags
+    # every pass moved wire bytes through the slotted a2a
+    for r in range(4):
+        sub = t.filter(tag=f"ext:pass{r}")
+        assert sub.filter(primitive="all_to_all").wire_bytes() > 0
+    # io pseudo-events: run formation + merge streaming, both directions,
+    # excluded from wire aggregates
+    assert t.io_bytes() > 0
+    assert t.filter(tag="ext:runs").io_bytes() > 0
+    assert t.filter(tag="ext:merge").io_bytes() > 0
+    io_prims = {e.primitive for e in t.events
+                if e.primitive in t.IO_PRIMITIVES}
+    assert io_prims == {"ext:h2d", "ext:d2h"}
+    assert t.wire_bytes() == sum(e.bytes for e in t.events
+                                 if e.primitive in t.PRIMITIVES)
+
+
+def test_trace_double_buffer_io_invariant():
+    """Double buffering reorders the copies but moves the same bytes."""
+    t1 = trace_collectives(256, 4, external=ExternalPolicy(budget=16))
+    t2 = trace_collectives(256, 4, external=ExternalPolicy(
+        budget=16, double_buffer=False))
+    assert t1.io_bytes() == t2.io_bytes()
+    assert t1.wire_bytes() == t2.wire_bytes()
+
+
+# ---------------------------------------------------------------------------
+# pass primitives: run formation, merge, capacity invariant
+# ---------------------------------------------------------------------------
+
+
+def _mk_runs(rng, lens, hi=1 << 20):
+    """Sorted (key, tie, idx) runs obeying the pipeline invariant:
+    globally unique idx, tie == _mix32(idx) (the merge engine recomputes
+    the tie from the carried idx), each run lex-sorted by (key, tie)."""
+    total = sum(lens)
+    ids = rng.permutation(total).astype(np.uint32)
+    runs, off = [], 0
+    for n in lens:
+        i = ids[off:off + n]
+        off += n
+        k = rng.integers(0, hi, size=n, dtype=np.int64).astype(np.uint32)
+        t = np.asarray(ext._mix32(jnp.asarray(i)))
+        order = np.lexsort((t, k))
+        runs.append((k[order], t[order], i[order]))
+    return runs
+
+
+def test_form_runs_round_trip():
+    rng = np.random.default_rng(11)
+    for n, b in [(0, 4), (3, 8), (8, 8), (37, 8), (64, 16), (65, 16)]:
+        keys = rng.integers(0, 1 << 31, size=n, dtype=np.int64) \
+            .astype(np.uint32)
+        idx = np.arange(n, dtype=np.uint32)
+        runs = ext.form_runs(keys, idx, budget=b)
+        assert len(runs) == max(1, -(-n // b))
+        got = np.concatenate([r[2] for r in runs]) if n else np.zeros(0)
+        assert sorted(got.tolist()) == list(range(n))
+        for k, t, i in runs:
+            comp = (k.astype(np.uint64) << np.uint64(32)) | t
+            assert (np.sort(comp) == comp).all()
+
+
+def test_merge_runs_equals_sorted_concat():
+    rng = np.random.default_rng(13)
+    for engine in ("classifier", "losertree"):
+        runs = _mk_runs(rng, (0, 1, 17, 40, 3))
+        k, t, i = ext.merge_runs(runs, budget=16, merge=engine)
+        ck = np.concatenate([r[0] for r in runs])
+        ct = np.concatenate([r[1] for r in runs])
+        ref = np.lexsort((ct, ck))
+        assert (k == ck[ref]).all() and (t == ct[ref]).all()
+
+
+def test_merge_runs_all_empty():
+    k, t, i = ext.merge_runs([(np.zeros(0, np.uint32),) * 3], budget=8)
+    assert len(k) == 0
+
+
+def test_provision_bound_holds():
+    """The run-slice capacity invariant: |run ∩ interval| <= (q+2)·g for
+    arbitrary splitters — the proof obligation behind the static slots."""
+    rng = np.random.default_rng(17)
+    for trial in range(50):
+        n = int(rng.integers(1, 300))
+        k, t, _ = _mk_runs(rng, (n,), hi=int(rng.integers(2, 1 << 16)))[0]
+        s = int(rng.integers(1, 40))
+        qk, qt, g = ext.run_sketch(k, t, s)
+        nb = int(rng.integers(2, 12))
+        sp = np.sort(rng.integers(0, 1 << 16, size=nb - 1,
+                                  dtype=np.int64)).astype(np.uint32)
+        st_ = rng.integers(0, 1 << 32, size=nb - 1,
+                           dtype=np.int64).astype(np.uint32)
+        order = np.lexsort((st_, sp))
+        sp, st_ = sp[order], st_[order]
+        cap = ext.provision(qk, qt, g, sp, st_, nb)
+        b = ext.np_bucket(k, t, sp, st_)
+        actual = np.bincount(b, minlength=nb)
+        assert (actual <= cap).all(), (trial, actual, cap)
+
+
+def test_external_never_overflows_on_skew():
+    """End to end: the sketch-provisioned slots hold on the adversarial
+    distributions at the proven slot_factor=1.0."""
+    for instance in ("AllToOne", "Zero", "Staggered", "DeterDupl"):
+        x = generate_instance(instance, P, 37 * P).astype(np.int32)
+        _, info = psort(x, p=P, backend="sim",
+                        external=ExternalPolicy(budget=8), return_info=True)
+        assert info["overflow"] == 0, instance
+
+
+# ---------------------------------------------------------------------------
+# classifier engine: kernel vs jnp fallback, kway pad-accounting regression
+# ---------------------------------------------------------------------------
+
+
+def test_classify_kernel_matches_jnp_at_block_size():
+    """At C >= _BLOCK the Pallas kway kernel and the jnp lex compare must
+    agree bitwise (interpret mode off-TPU)."""
+    from repro.kernels.kway import ops as kway_ops
+    rng = np.random.default_rng(19)
+    C = kway_ops._BLOCK
+    k = rng.integers(0, 1 << 32, size=C, dtype=np.int64).astype(np.uint32)
+    t = rng.integers(0, 1 << 32, size=C, dtype=np.int64).astype(np.uint32)
+    sp = np.sort(rng.integers(0, 1 << 32, size=7,
+                              dtype=np.int64)).astype(np.uint32)
+    st_ = rng.integers(0, 1 << 32, size=7, dtype=np.int64).astype(np.uint32)
+    a = ext._classify_jit(jnp.asarray(k), jnp.asarray(t), jnp.int32(C),
+                          jnp.asarray(sp), jnp.asarray(st_), nb=8,
+                          use_kernel=True)
+    b = ext._classify_jit(jnp.asarray(k), jnp.asarray(t), jnp.int32(C),
+                          jnp.asarray(sp), jnp.asarray(st_), nb=8,
+                          use_kernel=False)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    assert (np.asarray(a) == ext.np_bucket(k, t, sp, st_)).all()
+
+
+def test_kway_pad_accounting_regression():
+    """Regression (ISSUE 8 satellite): when the pad exceeds the true
+    last-bucket population, the histogram must clamp at zero — and the
+    pads must be subtracted from the bucket they actually land in
+    (len(s_keys)), not blindly from n_buckets-1."""
+    from repro.kernels.kway import kway_classify
+    from repro.kernels.kway.ref import kway_classify_ref
+    from repro.kernels.kway import ops as kway_ops
+    rng = np.random.default_rng(23)
+    # C chosen so pad = _BLOCK - C is large; keys all BELOW every
+    # splitter → true last-bucket count is 0 and the old accounting
+    # underflowed it to -pad
+    C = kway_ops._BLOCK + 7              # pad = _BLOCK - 7 >> any bucket
+    k = rng.integers(0, 1 << 8, size=C, dtype=np.int64).astype(np.uint32)
+    t = rng.integers(0, 1 << 32, size=C, dtype=np.int64).astype(np.uint32)
+    # 2 splitters with n_buckets=4: pads land in bucket len(s_keys)=2,
+    # NOT n_buckets-1=3 — the old accounting drove hist[3] to -pad
+    for sp in (np.array([1 << 10, 1 << 12], np.uint32),
+               np.array([1 << 10, 1 << 12, 1 << 14], np.uint32)):
+        st_ = np.zeros(sp.shape[0], np.uint32)
+        b, h = kway_classify(jnp.asarray(k), jnp.asarray(t),
+                             jnp.asarray(sp), jnp.asarray(st_),
+                             n_buckets=4, use_kernel=True)
+        br, hr = kway_classify_ref(jnp.asarray(k), jnp.asarray(t),
+                                   jnp.asarray(sp), jnp.asarray(st_),
+                                   n_buckets=4)
+        assert (np.asarray(h) >= 0).all()
+        assert (np.asarray(h) == np.asarray(hr)).all()
+        assert (np.asarray(b) == np.asarray(br)).all()
+        assert int(np.asarray(h).sum()) == C
+
+
+def test_kway_sub_block_fallback():
+    """Below _BLOCK the dispatcher takes the reference path (mirrors the
+    PR 7 partition fallback tests)."""
+    from repro.kernels.kway import kway_classify
+    from repro.kernels.kway.ref import kway_classify_ref
+    rng = np.random.default_rng(29)
+    k = rng.integers(0, 1 << 16, size=100, dtype=np.int64).astype(np.uint32)
+    t = rng.integers(0, 1 << 32, size=100, dtype=np.int64).astype(np.uint32)
+    sp = np.array([100, 1000, 10000], np.uint32)
+    st_ = np.zeros(3, np.uint32)
+    b, h = kway_classify(jnp.asarray(k), jnp.asarray(t), jnp.asarray(sp),
+                         jnp.asarray(st_), n_buckets=4, use_kernel=True)
+    br, hr = kway_classify_ref(jnp.asarray(k), jnp.asarray(t),
+                               jnp.asarray(sp), jnp.asarray(st_),
+                               n_buckets=4)
+    assert (np.asarray(b) == np.asarray(br)).all()
+    assert (np.asarray(h) == np.asarray(hr)).all()
+
+
+# ---------------------------------------------------------------------------
+# selection: the external regime
+# ---------------------------------------------------------------------------
+
+
+def test_selection_external_regime():
+    assert select_algorithm(1 << 20, 8, budget=1 << 10) == "external"
+    assert select_algorithm(64, 8, budget=1 << 10) != "external"
+    assert select_algorithm(1 << 20, 8) != "external"      # no budget, no cap
+    rows = regime_table(8, exponents=range(0, 24), budget=1 << 12)
+    algos = [a for _, _, a in rows]
+    assert algos[-1] == "external"
+    # the crossover is monotone: once external, always external
+    first = algos.index("external")
+    assert all(a == "external" for a in algos[first:])
+
+
+def test_cost_external_model_fields():
+    m = CostModel(io_beta=1e-9, overlap=0.5)
+    base = CostModel(io_beta=1e-9, overlap=0.0)
+    assert m.io_b == 1e-9
+    assert CostModel().io_b > 0                 # PCIe prior fallback
+    n, p, b = 1 << 22, 8, 1 << 16
+    assert cost_external(n, p, b, model=m) < cost_external(n, p, b,
+                                                           model=base)
+    assert cost_external(n, p, b) > 0
+    # JSON round-trip carries the new fields
+    m2 = CostModel.from_json(m.to_json())
+    assert m2.io_beta == 1e-9 and m2.overlap == 0.5
+    # profiles predating the external regime still load
+    legacy = CostModel.from_json(CostModel().to_json().replace(
+        '"io_beta": null,', '').replace('"overlap": 0.0,', ''))
+    assert legacy.io_beta is None
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (optional dependency, mirrors test_property.py)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # optional dep — mirror the
+    given = None                          # test_property.py convention
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 200), st.integers(1, 64), st.integers(0, 10**9))
+    def test_prop_form_runs_round_trip(n, budget, seed):
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(0, 1 << 32, size=n, dtype=np.int64) \
+            .astype(np.uint32)
+        runs = ext.form_runs(keys, np.arange(n, dtype=np.uint32),
+                             budget=budget)
+        assert len(runs) == max(1, -(-n // budget))
+        idx = np.concatenate([r[2] for r in runs]) if n \
+            else np.zeros(0, np.uint32)
+        assert sorted(idx.tolist()) == list(range(n))
+        got = np.concatenate([r[0] for r in runs]) if n \
+            else np.zeros(0, np.uint32)
+        assert sorted(got.tolist()) == sorted(keys.tolist())
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(0, 60), min_size=1, max_size=6),
+           st.integers(1, 32),
+           st.sampled_from(["classifier", "losertree"]),
+           st.integers(0, 10**9))
+    def test_prop_merge_equals_sorted_concat(lens, budget, engine, seed):
+        rng = np.random.default_rng(seed)
+        runs = _mk_runs(rng, lens, hi=64)             # duplicate-heavy
+        k, t, i = ext.merge_runs(runs, budget=budget, merge=engine)
+        ck = np.concatenate([r[0] for r in runs])
+        ct = np.concatenate([r[1] for r in runs])
+        ref = np.lexsort((ct, ck))
+        assert (k == ck[ref]).all() and (t == ct[ref]).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 250), st.integers(1, 40), st.integers(2, 12),
+           st.integers(0, 10**9))
+    def test_prop_sketch_provision_never_overflows(n, s, nb, seed):
+        rng = np.random.default_rng(seed)
+        k, t, _ = _mk_runs(rng, (n,), hi=256)[0]      # adversarial dups
+        qk, qt, g = ext.run_sketch(k, t, s)
+        sp = np.sort(rng.integers(0, 256, size=nb - 1,
+                                  dtype=np.int64)).astype(np.uint32)
+        st_ = np.zeros(nb - 1, np.uint32)
+        cap = ext.provision(qk, qt, g, sp, st_, nb)
+        actual = np.bincount(ext.np_bucket(k, t, sp, st_), minlength=nb)
+        assert (actual <= cap).all()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_prop_external_properties():
+        pass

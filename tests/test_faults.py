@@ -202,6 +202,59 @@ def test_empty_plan_single_attempt():
     assert info["fault"]["p_final"] == 4 and not info["fault"]["failed"]
 
 
+def test_external_kill_during_merge_pass():
+    """ISSUE 8 satellite: a kill during the external k-way merge pass
+    (tag ``ext:merge``) must exclude-and-rescale with the runs
+    redistributed — ``plan_sort_rescale`` composes with the multi-pass
+    external state because every attempt rebuilds runs/splitters/slices
+    from the host-resident input at the reduced topology."""
+    from repro.core import ExternalPolicy
+    p = 8
+    x = generate_instance("Uniform", p, 32 * p).astype(np.int32)
+    pol = _policy(kill_pe(3, tag="ext:merge"))
+    info = check_sort(x, p, "auto", backend="sim", fault_policy=pol,
+                      external=ExternalPolicy(budget=8))
+    _assert_fault_run(info, p, kills=1, rescales=1)
+    assert info["algorithm"] == "external"
+    kill = next(e for e in pol.trace.injected()
+                if e.primitive == "fault:kill")
+    assert kill.pe == 3 and kill.tag == "ext:merge"
+    # both attempts ran the external lane: n/p exceeds the budget before
+    # and (a fortiori) after the rescale to p = 4
+    assert [a["algorithm"] for a in pol.attempts] == ["external"] * 2
+    assert [a["p"] for a in pol.attempts] == [8, 4]
+
+
+def test_external_kill_during_exchange_pass():
+    """A mid-stream kill (second run's all_to_all) re-runs cleanly: no
+    partial pass state leaks into the rescaled attempt."""
+    from repro.core import ExternalPolicy
+    p = 4
+    x = generate_instance("Staggered", p, 32 * p).astype(np.int32)
+    pol = _policy(kill_pe(1, tag="ext:pass1"))
+    info = check_sort(x, p, "auto", backend="sim", fault_policy=pol,
+                      external=ExternalPolicy(budget=8))
+    _assert_fault_run(info, p, kills=1, rescales=1)
+    kill = next(e for e in pol.trace.injected()
+                if e.primitive == "fault:kill")
+    assert kill.tag == "ext:pass1"
+
+
+def test_rescale_crosses_into_external_regime():
+    """Shrinking p grows n/p: an in-core attempt whose rescale pushes the
+    shard past the budget must restart on the external lane."""
+    from repro.core import ExternalPolicy
+    p = 8
+    x = generate_instance("Uniform", p, 16 * p).astype(np.int32)
+    pol = _policy(kill_pe(2))
+    info = check_sort(x, p, "auto", backend="sim", fault_policy=pol,
+                      external=ExternalPolicy(budget=24))
+    # per = 16 <= 24 in-core at p=8; per = 32 > 24 external at p=4
+    algos = [a["algorithm"] for a in pol.attempts]
+    assert algos[0] != "external" and algos[-1] == "external"
+    assert info["fault"]["p_final"] == 4
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("instance", DISTS)
 @pytest.mark.parametrize("algorithm", ALGOS)
