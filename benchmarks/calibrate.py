@@ -666,6 +666,34 @@ def subgroup_rows(model: CostModel, npp: int = 32):
     return rows
 
 
+QUERY_GRID_P = (8, 64, 256)
+QUERY_GRID = (("rank_of_key", 32, None), ("range_query", 32, None),
+              ("percentile", 32, None), ("percentile", 64, None),
+              ("top_k", 32, 16), ("sort", 32, None))
+
+
+def query_rows(npp: int = 1 << 14, batch: int = 8):
+    """The "Query serving" grid: per-PE counted traces of the selection
+    fast paths (``core/queries.py``) next to the full sort that would
+    otherwise answer the same micro-batch.
+
+    Deterministic (trace-time counts, no wall-clock), so
+    ``tools/check_docs.py`` can diff the regenerated file.  The point of
+    the grid: a selection query's launch count is fixed by the key width
+    (``ceil(bits/4)`` refinement rounds) and its wire volume by the batch
+    — both independent of n — while the sort's volume is Ω(n/p)."""
+    from repro.core.queries import trace_query
+    rows = []
+    for p in QUERY_GRID_P:
+        n = npp * p
+        for kind, bits, k in QUERY_GRID:
+            dtype = np.uint32 if bits == 32 else np.uint64
+            tr = trace_query(kind, n, p, batch=batch, dtype=dtype, k=k)
+            rows.append((p, n, kind, bits, tr.p2p_launches,
+                         tr.fused_launches, tr.wire_bytes()))
+    return rows
+
+
 def write_experiments(path: str, model: CostModel):
     """Regenerate EXPERIMENTS.md: the regime tables ``selection.py``'s
     docstring points at, the subgroup-sort grid, and the profile-JSON
@@ -771,6 +799,33 @@ def write_experiments(path: str, model: CostModel):
          io_m) in external_rows():
         lines.append(f"| {n} | {p} | {budget} | {runs} | {passes} | {a2a} "
                      f"| {wire} | {io_b} | {io_r} | {io_m} |")
+
+    lines += [
+        "",
+        "## Query serving (selection fast paths vs. full sort)",
+        "",
+        "`launch/sort_serve.py` micro-batches queued queries by kind and",
+        "answers each batch with one launch of a `core/queries.py`",
+        "primitive over the resident (p, cap) locally-sorted shards — a",
+        "batch is a barrier, so every request in it shares the device",
+        "latency.  Counting queries (`rank_of_key`, `range_query`) cost one",
+        "fused psum; order statistics (`percentile`, `top_k`) run the exact",
+        "rank selection — a §III-B butterfly rank window (log2 p p2p steps,",
+        "32-bit keys only) then `ceil(bits/4)` counting-verified refinement",
+        "rounds of one sketch all_gather + one count psum, plus a verify",
+        "psum.  Cells are per-PE counted traces (`trace_query(kind, n, p,",
+        "batch=8)`, n/p = 2^14): the selection columns are fixed by the key",
+        "width and batch — independent of n — while the full sort's wire",
+        "volume is Ω(n/p).  `select_algorithm(n, p, query=...)` encodes the",
+        "crossover (`cost_select`): full sort wins only on tiny instances.",
+        "",
+        "| p | n | query | key bits | p2p launches | fused launches "
+        "| wire bytes/PE |",
+        "|---:|---:|---|---:|---:|---:|---:|",
+    ]
+    for p, n, kind, bits, p2p, fused, wire in query_rows():
+        lines.append(f"| {p} | {n} | {kind} | {bits} | {p2p} | {fused} "
+                     f"| {wire} |")
 
     lines += [
         "",

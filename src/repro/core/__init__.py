@@ -14,4 +14,7 @@ from .external import ExternalPolicy          # noqa: E402,F401
 from .types import (SortShard, make_shard, merge_shards, local_sort,  # noqa: E402,F401
                     key_to_uint, uint_to_key, LocalKernelPolicy,
                     local_kernels, set_local_kernels)
-from .selection import select_algorithm       # noqa: E402,F401
+from .selection import select_algorithm, cost_select  # noqa: E402,F401
+from .queries import (ResidentData, shard_data,       # noqa: E402,F401
+                      select_rank, rank_of_key, percentile, top_k,
+                      range_query, trace_query)

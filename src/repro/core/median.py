@@ -62,6 +62,57 @@ def merge_windows(a: jax.Array, b: jax.Array) -> jax.Array:
     return jax.lax.dynamic_slice(merged, (k // 2,), (k,))
 
 
+def local_rank_window(shard: SortShard, k: int, frac: jax.Array) -> jax.Array:
+    """k elements around local rank ``floor(frac·(m-1))``, ±inf-filled.
+
+    The quantile generalization of :func:`local_window` (``frac`` ≈ 0.5
+    recovers the median window up to the odd-count coin): the leaf step of
+    the selection fast path's butterfly, which seeds splitter candidates
+    for an arbitrary target rank instead of the median.  ``frac`` may be a
+    traced scalar in [0, 1] (one per query when vmapped).
+    """
+    assert k % 2 == 0, "window size k must be even"
+    lifted = jnp.where(shard.valid_mask(), lift(shard.keys), _HI)
+    ext = jnp.concatenate([
+        jnp.full((k,), _LO, jnp.uint64), lifted, jnp.full((k,), _HI, jnp.uint64)])
+    m = shard.count
+    r = jnp.floor(frac * jnp.maximum(m - 1, 0).astype(jnp.float64))
+    start = r.astype(jnp.int32) - k // 2 + 1
+    return jax.lax.dynamic_slice(ext, (start + k,), (k,))
+
+
+def merge_rank_windows(a: jax.Array, b: jax.Array, frac: jax.Array) -> jax.Array:
+    """k-window of the merged 2k centered at rank fraction ``frac``.
+
+    ``frac = 0.5`` keeps the middle k — exactly :func:`merge_windows`; other
+    fractions slide the kept window toward the target quantile so the
+    butterfly tracks an arbitrary order statistic's neighborhood.
+    """
+    k = a.shape[0]
+    merged = jnp.sort(jnp.concatenate([a, b]))
+    start = jnp.clip(jnp.round(frac * (2 * k)).astype(jnp.int32) - k // 2,
+                     0, k)
+    return jax.lax.dynamic_slice(merged, (start,), (k,))
+
+
+def butterfly_rank_window(shard: SortShard, axis_name: str, p: int,
+                          dims: Sequence[int], k: int,
+                          fracs: jax.Array) -> jax.Array:
+    """Per-query rank windows, agreed across the subcube (lifted space).
+
+    ``fracs`` is a (B,) batch of target rank fractions; returns (B, k)
+    windows.  Same induction as :func:`butterfly_median_window`: merging is
+    multiset-commutative and both partners keep the same slice, so every PE
+    of the subcube ends with identical windows — the selection fast path
+    uses their entries as round-0 splitter candidates without a broadcast.
+    """
+    w = jax.vmap(lambda f: local_rank_window(shard, k, f))(fracs)   # (B, k)
+    for t in dims:
+        wp = hc_exchange(w, axis_name, p, t)
+        w = jax.vmap(merge_rank_windows)(w, wp, fracs)
+    return w
+
+
 def butterfly_median_window(shard: SortShard, axis_name: str, p: int,
                             dims: Sequence[int], k: int,
                             seed) -> jax.Array:

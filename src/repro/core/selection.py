@@ -287,6 +287,41 @@ def cost_external(n, p, budget, model: CostModel = DEFAULT_MODEL):
     return io + coll + wire + local + classify
 
 
+def cost_select(n, p, query: str = "percentile", batch: int = 1,
+                k: Optional[int] = None, bits: int = 32,
+                model: CostModel = DEFAULT_MODEL):
+    """Cost of answering a ``batch`` of queries via the selection fast
+    path of ``core/queries.py`` — i.e. *without* sorting.
+
+    ``rank_of_key`` / ``range_query`` are pure counting: one fused psum
+    over per-PE ``searchsorted`` ranks.  ``percentile`` / ``top_k`` run
+    the exact rank selection: one §III-B butterfly window (d p2p steps),
+    then ``ceil(bits/4)`` static refinement rounds of (sketch all_gather
+    + count psum) with ~32 candidates × batch binary searches against the
+    resident shard each, plus a verify psum; top-k adds the local tail
+    extraction (≤ k words per PE).  Every term is O(polylog) in n — the
+    crossover against :data:`COSTS` is what makes the fast path a *regime*
+    rather than an always-win.
+    """
+    m = model
+    npp = max(1.0, n / p)
+    search = _lg(npp) / m.local_rate            # one binary search
+    if query in ("rank_of_key", "range_query"):
+        nq = batch * (2 if query == "range_query" else 1)
+        return m.coll(p) + nq * search
+    if query not in ("percentile", "top_k"):
+        raise ValueError(f"cost_select: unknown query kind {query!r}")
+    rounds = -(-bits // 4)                      # queries.n_rounds
+    ncand = 32 + 16                             # grid+sketch, window round 0
+    cost = (m.alpha * _d(p)                     # butterfly rank window
+            + (2 * rounds + 1) * m.coll(p)      # gather+psum / round, verify
+            + rounds * ncand * batch * search   # candidate ranking
+            + rounds * 16 * batch * p * _lg(16 * p) / m.local_rate)  # sketch
+    if query == "top_k":
+        cost += batch * (k or 16) / m.local_rate    # tail extraction
+    return cost
+
+
 COSTS = {
     "gatherm": cost_gatherm,
     "rfis": cost_rfis,
@@ -294,11 +329,15 @@ COSTS = {
     "rams": cost_rams,
 }
 
+QUERY_KINDS = ("sort", "top_k", "rank_of_key", "percentile", "range_query")
+
 
 def select_algorithm(n: int, p: int,
                      model: Optional[CostModel] = None,
                      levels: Optional[int] = None,
-                     mesh_shape=None, budget: Optional[int] = None) -> str:
+                     mesh_shape=None, budget: Optional[int] = None,
+                     query: Optional[str] = None, batch: int = 1,
+                     k: Optional[int] = None, bits: int = 32) -> str:
     """The paper's four-regime selection: argmin of the model costs.
 
     GatherM's output lives on one PE (no balance guarantee) → only
@@ -320,8 +359,31 @@ def select_algorithm(n: int, p: int,
     runnable at all, so any n/p above the budget selects "external"; below
     it the budget only matters through the crossover the cost model already
     encodes (streaming traffic vs. in-core wire volume).
+
+    ``query`` adds the serving dimension (``core/queries.py``): for a
+    non-``"sort"`` query kind the sort-free selection path
+    (:func:`cost_select`, parameterized by ``batch``/``k``/``bits``)
+    competes against answering off a full sort — the comparison charges
+    the *entire* sort to the query batch, the right call for one-shot
+    data; an amortizing service keeps sorted answers resident and makes
+    its own policy (see ``launch/sort_serve.py``).  Returns
+    ``"selection"`` when the fast path wins, else the sort regime's name.
     """
     m = model if model is not None else DEFAULT_MODEL
+    if query is not None and query != "sort":
+        if query not in QUERY_KINDS:
+            raise ValueError(f"unknown query kind {query!r}; "
+                             f"know {QUERY_KINDS}")
+        algo = select_algorithm(n, p, model=m, levels=levels,
+                                mesh_shape=mesh_shape, budget=budget)
+        c_sort = cost_external(n, p, budget, model=m) \
+            if algo == "external" else \
+            (cost_rams(max(1, n), p, levels=levels, model=m,
+                       mesh_shape=mesh_shape) if algo == "rams"
+             else COSTS[algo](max(1, n), p, model=m))
+        c_sel = cost_select(n, p, query=query, batch=batch, k=k, bits=bits,
+                            model=m)
+        return "selection" if c_sel < c_sort else algo
     if budget is not None and n / p > budget:
         return "external"
     cands = dict(COSTS)

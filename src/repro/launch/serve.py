@@ -17,7 +17,28 @@ from repro.configs import get_config, smoke_variant
 from repro.dist.sharding import make_shardings
 from repro.launch import steps as S
 from repro.launch.mesh import make_mesh_shape
+from repro.launch.sort_serve import latency_stats
 from repro.models import transformer as T
+
+
+def next_token_input(nxt, batch: int) -> dict:
+    """Normalize a sampler output to the serve step's ``(batch, 1)`` int32
+    token contract.
+
+    Accepts ``(batch,)`` or ``(batch, 1)``.  Anything wider — e.g. a
+    multi-head sampler's ``(batch, heads)`` — is ambiguous: the old
+    ``reshape(batch, 1)[..., :1]`` fallback silently fed head 0's token
+    stream interleaved across heads.  Reduce to one token per sequence
+    before feeding; this boundary now rejects everything else.
+    """
+    if nxt.ndim == 1:
+        nxt = nxt[:, None]
+    if nxt.shape != (batch, 1):
+        raise ValueError(
+            f"sampler output shape {nxt.shape} does not satisfy the "
+            f"(batch={batch}, 1) next-token contract; reduce multi-head "
+            "samples to one token per sequence before feeding")
+    return {"tokens": nxt.astype(jnp.int32)}
 
 
 def serve(cfg, mesh, *, batch: int, tokens: int, cache_len: int = 256,
@@ -39,7 +60,6 @@ def serve(cfg, mesh, *, batch: int, tokens: int, cache_len: int = 256,
 
     lat = []
     out_tokens = []
-    ctx = mesh or jax.NamedSharding  # context manager only when mesh given
     for t in range(tokens):
         t0 = time.perf_counter()
         if mesh is not None:
@@ -51,15 +71,18 @@ def serve(cfg, mesh, *, batch: int, tokens: int, cache_len: int = 256,
         lat.append(time.perf_counter() - t0)
         out_tokens.append(np.asarray(nxt))
         if cfg.family != "audio":
-            inp = {"tokens": nxt.reshape(batch, 1)[..., :1] if nxt.ndim > 1
-                   else nxt[:, None]}
-    lat = np.array(lat[1:]) if len(lat) > 1 else np.array(lat)
-    stats = {"p50_ms": float(np.percentile(lat, 50) * 1e3),
-             "p99_ms": float(np.percentile(lat, 99) * 1e3),
-             "tok_per_s": float(batch / lat.mean())}
-    logger(f"[serve] {cfg.name}: {tokens} steps, batch {batch}: "
-           f"p50 {stats['p50_ms']:.2f}ms p99 {stats['p99_ms']:.2f}ms "
-           f"{stats['tok_per_s']:.0f} tok/s")
+            inp = next_token_input(nxt, batch)
+    # first step times compilation; with <= 1 post-warmup samples the
+    # stats come back None-valued with a note instead of bogus percentiles
+    stats = latency_stats(lat, warmup=1, rate_scale=batch, note_ctx="step")
+    stats["tok_per_s"] = stats.pop("per_s")
+    if stats["p50_ms"] is None:
+        logger(f"[serve] {cfg.name}: {tokens} steps, batch {batch}: "
+               f"{stats['note']}")
+    else:
+        logger(f"[serve] {cfg.name}: {tokens} steps, batch {batch}: "
+               f"p50 {stats['p50_ms']:.2f}ms p99 {stats['p99_ms']:.2f}ms "
+               f"{stats['tok_per_s']:.0f} tok/s")
     return np.concatenate(out_tokens, axis=0), stats
 
 

@@ -57,6 +57,37 @@ def test_new_and_dropped_cells_do_not_fail():
     assert [k for k, _ in res["dropped"]] == [("256", "rfis", "-3")]
 
 
+def test_dropped_cells_fail_with_flag():
+    """A regression that deletes a gated cell must not silently pass:
+    fail_on_dropped moves dropped baseline cells into the fail bucket."""
+    fresh = dict(BASE)
+    del fresh[("256", "rfis", "-3")]
+    res = compare(_bench(BASE), _bench(fresh), fail_on_dropped=True)
+    assert [k for k, _ in res["dropped"]] == [("256", "rfis", "-3")]
+    assert [k for k, _ in res["fail"]] == [("256", "rfis", "-3")]
+    # the ratio slot is None — there is no fresh measurement to ratio
+    assert res["fail"][0][1] is None
+    # new cells are still never failures, flag or not
+    fresh[("1024", "rams@16x64", "0")] = 999.0
+    res = compare(_bench(BASE), _bench(fresh), fail_on_dropped=True)
+    assert [k for k, _ in res["new"]] == [("1024", "rams@16x64", "0")]
+    assert [k for k, _ in res["fail"]] == [("256", "rfis", "-3")]
+
+
+def test_cli_fail_on_dropped(tmp_path):
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(_bench(BASE)))
+    fresh = dict(BASE)
+    del fresh[("64", "rams", "2")]
+    fresh_p = tmp_path / "fresh.json"
+    fresh_p.write_text(json.dumps(_bench(fresh)))
+    # default stays report-only (the nightly deep lane relies on this)
+    assert check_main(["--baseline", str(base_p),
+                       "--fresh", str(fresh_p)]) == 0
+    assert check_main(["--baseline", str(base_p), "--fresh", str(fresh_p),
+                       "--fail-on-dropped"]) == 1
+
+
 def test_cli_exit_codes(tmp_path):
     base_p = tmp_path / "base.json"
     base_p.write_text(json.dumps(_bench(BASE)))

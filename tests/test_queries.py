@@ -1,0 +1,204 @@
+"""Selection fast paths vs. the full-sort oracle.
+
+The whole point of ``core/queries.py`` is that its answers are *bitwise*
+those of sorting: every differential here indexes ``np.sort`` (and, in
+the property test, the repo's own ``psort``) and demands equality — on
+all 11 paper input distributions, on both execution backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import comm, psort, queries, selection
+from repro.core.queries import (QUERY_KINDS, n_rounds, percentile,
+                                range_query, rank_of_key, select_rank,
+                                shard_data, top_k, trace_query)
+from repro.data.distributions import INSTANCES, generate_instance
+
+P = 8
+ALL_INSTANCES = sorted(INSTANCES)
+BACKENDS = ("sim", "shard_map")
+
+
+def _oracle_queries(x, data, backend):
+    """Run every query kind against one instance and check bitwise."""
+    srt = np.sort(x)
+    n = len(x)
+    # order statistics at the edges, middle, and around duplicates
+    ranks = np.unique(np.clip(np.array([1, 2, n // 3, n // 2, n - 1, n]),
+                              1, n))
+    vals, glt, gle = select_rank(data, ranks, backend=backend)
+    assert (vals == srt[ranks - 1]).all(), (vals, srt[ranks - 1])
+    assert (glt < ranks).all() and (ranks <= gle).all()
+    qs = np.array([0.0, 10.0, 50.0, 90.0, 99.0, 100.0])
+    pv = percentile(data, qs, backend=backend)
+    idx = np.floor(qs / 100.0 * (n - 1)).astype(np.int64)
+    assert (pv == srt[idx]).all(), (pv, srt[idx])
+    for k in (1, 3, min(40, n)):
+        tk = top_k(data, k, backend=backend)
+        assert (tk == srt[n - k:]).all(), (k, tk, srt[n - k:])
+    keys = np.concatenate([x[:3], srt[:1], srt[-1:],
+                           srt[-1:] - 1 if n else srt[-1:]])
+    lt, le = rank_of_key(data, keys, backend=backend)
+    assert (lt == np.searchsorted(srt, keys, "left")).all()
+    assert (le == np.searchsorted(srt, keys, "right")).all()
+    lo = np.minimum(x[1], x[5])
+    hi = np.maximum(x[1], x[5])
+    cnt = range_query(data, np.array([lo, srt[0]]), np.array([hi, srt[-1]]),
+                      backend=backend)
+    want = [np.searchsorted(srt, hi, "left") -
+            np.searchsorted(srt, lo, "left"),
+            np.searchsorted(srt, srt[-1], "left")]
+    assert (cnt == np.asarray(want)).all(), (cnt, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("instance", ALL_INSTANCES)
+def test_differential_all_instances(instance, backend):
+    """top_k / percentile / rank_of_key / range_query vs. the NumPy
+    oracle on every paper distribution (64-bit keys: sketch+grid only)."""
+    x = generate_instance(instance, P, 64 * P).astype(np.int64)
+    data = shard_data(x, P)
+    _oracle_queries(x, data, backend)
+
+
+@pytest.mark.parametrize("instance", ALL_INSTANCES)
+def test_differential_u32_window_path(instance):
+    """32-bit keys additionally exercise the §III-B butterfly-window
+    candidate seeding (lifted u64 space needs headroom above the keys)."""
+    x = (generate_instance(instance, P, 64 * P) % (1 << 31)).astype(np.int32)
+    data = shard_data(x, P)
+    assert data.bits == 32
+    _oracle_queries(x, data, "sim")
+
+
+@pytest.mark.parametrize("instance", ALL_INSTANCES)
+def test_selection_agrees_with_fullsort_psort(instance):
+    """The property the service relies on: the selection path and the
+    full-sort path answer identically, bit for bit."""
+    x = generate_instance(instance, P, 32 * P).astype(np.int64)
+    data = shard_data(x, P)
+    full = np.asarray(psort(x, p=P, backend="sim"))
+    n = len(x)
+    ranks = np.array([1, n // 4, n // 2, n])
+    vals, _, _ = select_rank(data, ranks)
+    assert (vals == full[ranks - 1]).all()
+    for k in (2, 17):
+        assert (top_k(data, k) == full[n - k:]).all()
+    keys = x[:4]
+    lt, le = rank_of_key(data, keys)
+    assert (lt == np.searchsorted(full, keys, "left")).all()
+    assert (le == np.searchsorted(full, keys, "right")).all()
+
+
+def test_float_and_negative_keys():
+    r = np.random.default_rng(3)
+    for x in (r.normal(size=400).astype(np.float32),
+              r.integers(-2**31, 2**31, size=400).astype(np.int32),
+              r.normal(size=400).astype(np.float64)):
+        data = shard_data(x, P)
+        srt = np.sort(x)
+        assert (top_k(data, 10) == srt[-10:]).all()
+        assert percentile(data, 50.0) == srt[len(x) // 2 - 1 +
+                                             (len(x) % 2)]
+        lt, le = rank_of_key(data, x[7])
+        assert lt == np.searchsorted(srt, x[7], "left")
+        assert le == np.searchsorted(srt, x[7], "right")
+
+
+def test_backends_bitwise_identical():
+    x = generate_instance("Staggered", P, 64 * P).astype(np.int64)
+    data = shard_data(x, P)
+    ranks = np.array([1, 100, 512])
+    a = select_rank(data, ranks, backend="sim")
+    b = select_rank(data, ranks, backend="shard_map")
+    for u, v in zip(a, b):
+        assert (u == v).all()
+    assert all((u == v).all() for u, v in
+               zip(top_k(data, np.array([5, 9]), backend="sim"),
+                   top_k(data, np.array([5, 9]), backend="shard_map")))
+
+
+def test_scalar_and_batch_api():
+    x = np.arange(100, dtype=np.int64)
+    data = shard_data(x, 4)
+    assert top_k(data, 3).tolist() == [97, 98, 99]
+    assert percentile(data, 0.0) == 0
+    assert rank_of_key(data, 50) == (50, 51)
+    assert range_query(data, 10, 20) == 10
+    assert range_query(data, 20, 10) == 0          # empty interval
+    vals, glt, gle = select_rank(data, np.array([1, 100]))
+    assert vals.tolist() == [0, 99]
+    assert glt.tolist() == [0, 99] and gle.tolist() == [1, 100]
+
+
+def test_validation_errors():
+    data = shard_data(np.arange(16, dtype=np.int32), 4)
+    with pytest.raises(ValueError, match="power of two"):
+        shard_data(np.arange(9), 3)
+    with pytest.raises(ValueError, match="1-D"):
+        shard_data(np.zeros((2, 2)), 2)
+    with pytest.raises(ValueError, match="ranks"):
+        select_rank(data, 0)
+    with pytest.raises(ValueError, match="ranks"):
+        select_rank(data, 17)
+    with pytest.raises(ValueError, match="k must"):
+        top_k(data, 0)
+    with pytest.raises(ValueError, match="percentile"):
+        percentile(data, 101.0)
+    with pytest.raises(ValueError, match="backend"):
+        top_k(data, 1, backend="mpi")
+
+
+def test_trace_query_counts():
+    """The counted collective schedule is deterministic: counting queries
+    cost one fused psum; selection queries cost the butterfly window plus
+    (gather + psum) per refinement round plus the verify psum."""
+    t = trace_query("rank_of_key", 1 << 12, P, batch=4)
+    assert t.summary()["counts"] == {"psum": 1}
+    assert t.tags() == ["query:counts"]
+    r32, r64 = n_rounds(32), n_rounds(64)
+    t = trace_query("percentile", 1 << 12, P, batch=4, dtype=np.uint32)
+    c = t.summary()["counts"]
+    assert c["all_gather"] == r32 and c["psum"] == r32 + 1
+    assert c["ppermute"] == 3                      # log2(8) window steps
+    t = trace_query("top_k", 1 << 12, P, batch=4, dtype=np.uint64, k=8)
+    c = t.summary()["counts"]
+    assert c["all_gather"] == r64 and c["psum"] == r64 + 1
+    assert "ppermute" not in c                     # no u64 window
+    assert "all_to_all" not in c                   # never moves the data
+    tags = set(trace_query("percentile", 1 << 12, P).tags())
+    assert {"query:round0", "query:verify", "query:window"} <= tags
+
+
+def test_cost_select_and_query_selection():
+    """The cost model's serving regime: sort-free selection wins at scale
+    (its terms are polylog in n), the full sort wins on tiny instances
+    (fixed round launches dominate), and the committed BENCH cells' p
+    values sit on the selection side for top-k/percentile."""
+    for p in (64, 256):
+        n = (1 << 18) * p
+        assert selection.select_algorithm(n, p, query="top_k",
+                                          k=16) == "selection"
+        assert selection.select_algorithm(n, p,
+                                          query="percentile") == "selection"
+        assert selection.select_algorithm(n, p,
+                                          query="rank_of_key") == "selection"
+    assert selection.select_algorithm(64, 8, query="top_k", k=4) \
+        in ("rfis", "rquick", "gatherm")
+    # sort / None keep the four-regime behavior
+    assert selection.select_algorithm(2**20 * 64, 64, query="sort") == \
+        selection.select_algorithm(2**20 * 64, 64)
+    with pytest.raises(ValueError, match="query kind"):
+        selection.select_algorithm(1 << 20, 64, query="median_of_medians")
+    # cost is monotone in batch and rounds (u64 costs more than u32)
+    m = selection.DEFAULT_MODEL
+    assert selection.cost_select(1 << 20, 64, "percentile", batch=8,
+                                 model=m) > \
+        selection.cost_select(1 << 20, 64, "percentile", batch=1, model=m)
+    assert selection.cost_select(1 << 20, 64, "percentile", bits=64,
+                                 model=m) > \
+        selection.cost_select(1 << 20, 64, "percentile", bits=32, model=m)
+
+
+def test_query_kinds_constant_in_sync():
+    assert set(QUERY_KINDS) == set(selection.QUERY_KINDS)

@@ -1,0 +1,161 @@
+"""The serving layer: continuous-batching SortService semantics, the
+None-safe latency stats, and the (batch, 1) next-token feed contract."""
+import numpy as np
+import pytest
+
+from repro.launch.serve import next_token_input
+from repro.launch.sort_serve import (Request, SortService, latency_stats,
+                                     main as serve_main, parse_mix)
+
+import jax.numpy as jnp
+
+
+# -- latency_stats (shared by both serving drivers) -------------------------
+
+
+def test_latency_stats_normal():
+    st = latency_stats([0.5, 0.010, 0.010, 0.010], warmup=1, rate_scale=8)
+    assert st["n"] == 3
+    assert st["p50_ms"] == pytest.approx(10.0)
+    assert st["per_s"] == pytest.approx(800.0)
+
+
+@pytest.mark.parametrize("lat", [[], [0.5]])
+def test_latency_stats_guards_tiny_samples(lat):
+    """tokens=1 / empty runs must not report compile-time as a percentile:
+    all stats come back None with an explanatory note."""
+    st = latency_stats(lat, warmup=1)
+    assert st["p50_ms"] is None and st["p99_ms"] is None
+    assert st["per_s"] is None
+    assert "warmup" in st["note"]
+    assert st["n"] == len(lat)
+
+
+def test_latency_stats_warmup_zero_keeps_single_sample():
+    st = latency_stats([0.020], warmup=0)
+    assert st["p50_ms"] == pytest.approx(20.0)
+
+
+# -- next-token feed contract (launch/serve.py bugfix) ----------------------
+
+
+def test_next_token_input_contract():
+    flat = jnp.array([3, 1, 4, 1])
+    out = next_token_input(flat, 4)
+    assert out["tokens"].shape == (4, 1)
+    assert out["tokens"].dtype == jnp.int32
+    col = jnp.array([[3], [1], [4], [1]])
+    assert next_token_input(col, 4)["tokens"].shape == (4, 1)
+    # multi-head sampler output is ambiguous — must be rejected, not
+    # silently sliced (the old reshape fed head-interleaved garbage)
+    with pytest.raises(ValueError, match="next-token contract"):
+        next_token_input(jnp.zeros((4, 2), jnp.int32), 4)
+    with pytest.raises(ValueError, match="next-token contract"):
+        next_token_input(jnp.zeros((8,), jnp.int32), 4)
+
+
+# -- SortService ------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def svc_and_oracle():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 1 << 20, size=2048).astype(np.int64)
+    return keys, np.sort(keys)
+
+
+def _mk(keys, **kw):
+    kw.setdefault("backend", "sim")
+    return SortService(keys, 8, **kw)
+
+
+def test_service_micro_batches_by_head_kind(svc_and_oracle):
+    keys, _ = svc_and_oracle
+    svc = _mk(keys, policy="selection")
+    svc.submit("top_k", 3)
+    svc.submit("top_k", 5)
+    svc.submit("percentile", 50.0)
+    svc.submit("top_k", 7)
+    done = svc.step()
+    # one launch answers every queued top_k (FIFO), skipping the
+    # percentile; batch barrier → identical step latency for the group
+    assert [r.request.arg for r in done] == [3, 5, 7]
+    assert len({r.step_s for r in done}) == 1
+    assert all(r.batch == 3 for r in done)
+    assert [r.kind for r in svc.queue] == ["percentile"]
+    done2 = svc.step()
+    assert [r.request.kind for r in done2] == ["percentile"]
+    assert svc.step() == []                      # empty queue is a no-op
+
+
+def test_service_answers_match_oracle(svc_and_oracle):
+    keys, srt = svc_and_oracle
+    n = len(keys)
+    for policy in ("selection", "fullsort"):
+        svc = _mk(keys, policy=policy)
+        ids = [svc.submit("top_k", 10), svc.submit("percentile", 25.0),
+               svc.submit("rank_of_key", int(keys[3])),
+               svc.submit("range_query", (int(srt[10]), int(srt[100])))]
+        out = {r.request.id: r for r in svc.drain()}
+        assert (np.asarray(out[ids[0]].value) == srt[-10:]).all()
+        assert out[ids[1]].value == srt[int(np.floor(0.25 * (n - 1)))]
+        assert out[ids[2]].value == (
+            int(np.searchsorted(srt, keys[3], "left")),
+            int(np.searchsorted(srt, keys[3], "right")))
+        assert out[ids[3]].value == 90
+        assert all(r.path == policy for r in out.values())
+
+
+def test_service_sort_requests_and_fullsort_cache(svc_and_oracle):
+    keys, srt = svc_and_oracle
+    svc = _mk(keys)
+    svc.submit("sort")
+    svc.submit("sort")
+    done = svc.drain()
+    assert all((np.asarray(r.value) == srt).all() for r in done)
+    assert all(r.path == "sort" for r in done)
+    assert svc._sorted is not None               # cached, built once
+
+
+def test_service_auto_policy_consults_cost_model(svc_and_oracle):
+    keys, _ = svc_and_oracle
+    svc = _mk(keys, policy="auto")
+    # n=2048 at p=8 is deep inside the sort-wins regime of cost_select
+    assert svc.route("top_k", 1) in ("selection", "fullsort")
+    svc.submit("top_k", 4)
+    (r,) = svc.drain()
+    assert r.path in ("selection", "fullsort")
+
+
+def test_service_stats_and_guards(svc_and_oracle):
+    keys, _ = svc_and_oracle
+    svc = _mk(keys, policy="selection")
+    assert svc.stats() == {}                     # nothing completed yet
+    svc.submit("top_k", 2)
+    svc.drain()
+    st = svc.stats()
+    # a single request <= warmup → guarded None stats, not fake numbers
+    assert st["top_k"]["p50_ms"] is None and "note" in st["top_k"]
+    for _ in range(5):
+        svc.submit("top_k", 2)
+    svc.drain()
+    st = svc.stats()
+    assert st["top_k"]["p50_ms"] is not None
+    assert st["overall"]["queries_per_s"] > 0
+
+
+def test_service_validation():
+    svc = _mk(np.arange(64, dtype=np.int32))
+    with pytest.raises(ValueError, match="query kind"):
+        svc.submit("argmax")
+    with pytest.raises(ValueError, match="policy"):
+        _mk(np.arange(64, dtype=np.int32), policy="always")
+    with pytest.raises(ValueError, match="query kind"):
+        parse_mix("top_k=1,bogus=2")
+    assert parse_mix("top_k=4,sort") == {"top_k": 4, "sort": 1}
+
+
+def test_cli_smoke(capsys):
+    serve_main(["--smoke", "--queries", "12", "--seed", "1"])
+    out = capsys.readouterr().out
+    assert "[sort_serve]" in out and "12 queries" in out

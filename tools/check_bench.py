@@ -8,7 +8,9 @@ Compares a freshly measured ``BENCH_calibrate.json`` (written by
   * **warn**  — slower than ``--warn-ratio`` (default 1.2×);
   * **report** — improvements (faster than 1/warn-ratio), cells new in the
     fresh run (no baseline yet — e.g. a widened sweep), and cells the fresh
-    run dropped.
+    run dropped.  With ``--fail-on-dropped`` (on in the PR CI lanes) a
+    dropped baseline cell is a gate failure, not a report line — deleting
+    a bench cell must not silently pass.
 
 Wall-clock gating across runner generations is noisy, which is exactly why
 the thresholds are ratios per cell rather than absolute times, and why the
@@ -44,12 +46,19 @@ def iter_cells(bench: dict):
 
 
 def compare(baseline: dict, fresh: dict, fail_ratio: float = 1.5,
-            warn_ratio: float = 1.2) -> dict:
+            warn_ratio: float = 1.2, fail_on_dropped: bool = False) -> dict:
     """Per-cell ratio comparison of two bench JSON dicts.
 
     Returns {"fail": [...], "warn": [...], "improved": [...], "new": [...],
     "dropped": [...], "ok": [...]}; each entry is (cell_key, ratio-or-None).
     A cell fails when fresh/baseline > fail_ratio.
+
+    ``fail_on_dropped`` additionally moves every dropped baseline cell
+    (present in the baseline, missing from the fresh run) into ``fail``:
+    a change that silently stops producing a gated cell would otherwise
+    pass the gate with the regression invisible.  Off by default so
+    intentionally narrower sweeps (the nightly deep job's grid differs
+    from the PR baseline) can still run report-only.
     """
     base_cells = dict(iter_cells(baseline.get("bench", {})))
     fresh_cells = dict(iter_cells(fresh.get("bench", {})))
@@ -71,6 +80,8 @@ def compare(baseline: dict, fresh: dict, fail_ratio: float = 1.5,
     for key in sorted(base_cells):
         if key not in fresh_cells:
             out["dropped"].append((key, None))
+            if fail_on_dropped:
+                out["fail"].append((key, None))
     return out
 
 
@@ -88,6 +99,11 @@ def main(argv=None) -> int:
                     help="freshly measured bench JSON to gate")
     ap.add_argument("--fail-ratio", type=float, default=1.5)
     ap.add_argument("--warn-ratio", type=float, default=1.2)
+    ap.add_argument("--fail-on-dropped", action="store_true",
+                    help="treat baseline cells missing from the fresh run "
+                         "as gate failures (on in the PR CI lanes; leave "
+                         "off for report-only runs whose sweep grid "
+                         "legitimately differs from the baseline)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -105,7 +121,8 @@ def main(argv=None) -> int:
               f"the first time; if ratios drift for hardware reasons, "
               f"regenerate the baseline from this run's artifact")
 
-    res = compare(baseline, fresh, args.fail_ratio, args.warn_ratio)
+    res = compare(baseline, fresh, args.fail_ratio, args.warn_ratio,
+                  fail_on_dropped=args.fail_on_dropped)
     n_common = sum(len(res[k]) for k in ("fail", "warn", "improved", "ok"))
     print(f"compared {n_common} cells "
           f"({len(res['new'])} new, {len(res['dropped'])} dropped)")
@@ -120,12 +137,16 @@ def main(argv=None) -> int:
         print(f"WARN      {_fmt(key, ratio)} "
               f"(> {args.warn_ratio}x baseline)")
     for key, ratio in res["fail"]:
-        print(f"FAIL      {_fmt(key, ratio)} "
-              f"(> {args.fail_ratio}x baseline)")
+        if ratio is None:
+            print(f"FAIL      {_fmt(key, None)} (baseline cell dropped "
+                  f"from the fresh run; --fail-on-dropped)")
+        else:
+            print(f"FAIL      {_fmt(key, ratio)} "
+                  f"(> {args.fail_ratio}x baseline)")
     if res["fail"]:
-        print(f"perf gate FAILED: {len(res['fail'])} cell(s) above "
-              f"{args.fail_ratio}x — if intentional, regenerate the "
-              f"committed baseline (see module docstring)")
+        print(f"perf gate FAILED: {len(res['fail'])} cell(s) regressed "
+              f"(> {args.fail_ratio}x) or dropped — if intentional, "
+              f"regenerate the committed baseline (see module docstring)")
         return 1
     print(f"perf gate OK ({len(res['warn'])} warning(s), "
           f"{len(res['improved'])} improvement(s))")
