@@ -5,7 +5,7 @@ instances.  Measured on p emulated CPU devices (relative regime structure);
 """
 import numpy as np
 
-from repro.core.api import psort
+from repro.core.api import SortConfig, psort
 from repro.core import selection
 from repro.data.distributions import generate_instance
 
@@ -41,9 +41,9 @@ def main():
                          "SKIP:out-of-regime")
                     continue
                 try:
-                    us = timeit(lambda: np.asarray(
-                        psort(x, p=P, algorithm=algo)))
-                    ok = (np.asarray(psort(x, p=P, algorithm=algo))
+                    cfg = SortConfig(p=P, algorithm=algo)
+                    us = timeit(lambda: np.asarray(psort(x, config=cfg)))
+                    ok = (np.asarray(psort(x, config=cfg))
                           == np.sort(x)).all()
                     status = f"{model_time(algo, n):.2e}s@262144" if ok \
                         else "MIS-SORTED"

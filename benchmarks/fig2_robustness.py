@@ -10,7 +10,7 @@ deadlocks/crashes).
 """
 import numpy as np
 
-from repro.core.api import psort
+from repro.core.api import SortConfig, psort
 from repro.data.distributions import generate_instance
 
 from common import emit, timeit
@@ -21,21 +21,20 @@ P = 8
 def run_pair(tag, inst, n, robust_algo, nonrobust_algo, robust_kw=None,
              nonrobust_kw=None):
     x = generate_instance(inst, P, n).astype(np.int32)
-    us_r = timeit(lambda: np.asarray(psort(x, p=P, algorithm=robust_algo,
-                                           **(robust_kw or {}))))
-    _, info_r = psort(x, p=P, algorithm=robust_algo, return_info=True,
-                      **(robust_kw or {}))
+    cfg_r = SortConfig(p=P, algorithm=robust_algo,
+                       algo_kw=robust_kw or {})
+    us_r = timeit(lambda: np.asarray(psort(x, config=cfg_r)))
+    _, info_r = psort(x, config=cfg_r, return_info=True)
     assert info_r["overflow"] == 0, (tag, inst, n)
     try:
-        _, info_n = psort(x, p=P, algorithm=nonrobust_algo, return_info=True,
-                          **(nonrobust_kw or {}))
+        cfg_n = SortConfig(p=P, algorithm=nonrobust_algo,
+                           algo_kw=nonrobust_kw or {})
+        _, info_n = psort(x, config=cfg_n, return_info=True)
         if info_n["overflow"] > 0:
             emit(f"{tag}/{inst}/n{n}", us_r,
                  f"nonrobust OVERFLOW({info_n['overflow']})")
             return
-        us_n = timeit(lambda: np.asarray(psort(x, p=P,
-                                               algorithm=nonrobust_algo,
-                                               **(nonrobust_kw or {}))))
+        us_n = timeit(lambda: np.asarray(psort(x, config=cfg_n)))
         emit(f"{tag}/{inst}/n{n}", us_r, f"ratio={us_r / us_n:.3f}")
     except Exception as e:   # noqa: BLE001
         emit(f"{tag}/{inst}/n{n}", us_r, f"nonrobust FAIL:{type(e).__name__}")

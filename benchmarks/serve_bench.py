@@ -31,7 +31,7 @@ import numpy as np
 
 import jax
 
-from repro.core import psort
+from repro.core import SortConfig, psort
 from repro.core.queries import (percentile, range_query, rank_of_key,
                                 shard_data, top_k)
 from repro.launch.sort_serve import SortService
@@ -83,7 +83,8 @@ def bench_p(p: int, e: int, iters: int, seed: int = 0,
         # the selection cells must beat the *best* sorting comparator,
         # not whatever the regime model happens to pick.
         return np.asarray(jax.block_until_ready(
-            psort(keys, p=p, algorithm="rquick", backend="sim")))
+            psort(keys, config=SortConfig(p=p, algorithm="rquick",
+                                          backend="sim"))))
 
     def topk_fullsort():
         s = sorted_now()                   # one sort answers the batch

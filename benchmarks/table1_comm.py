@@ -14,7 +14,8 @@ import numpy as np
 
 import jax
 from repro.core import types as ct
-from repro.core.api import _algorithm_fn, default_mesh, trace_collectives
+from repro.core.api import (SortConfig, _algorithm_fn, default_mesh,
+                            trace_collectives)
 from repro.launch import hlo_cost
 from jax.sharding import PartitionSpec as P
 
@@ -66,7 +67,7 @@ def main():
         wire = sum(a["collective_bytes"].values())
         pred_words = vol_fn(n, P_DEV)
         try:
-            tr = trace_collectives(n, P_DEV, algo)
+            tr = trace_collectives(n, SortConfig(p=P_DEV, algorithm=algo))
             counted = f"cnt={tr.launches}/{tr.wire_bytes()}B"
         except Exception as e:   # noqa: BLE001
             counted = f"cnt=FAIL:{type(e).__name__}"

@@ -12,7 +12,7 @@ if "XLA_FLAGS" not in os.environ:
 
 import numpy as np                                  # noqa: E402
 
-from repro.core import psort, select_algorithm      # noqa: E402
+from repro.core import SortConfig, psort, select_algorithm  # noqa: E402
 from repro.data.distributions import INSTANCES, generate_instance  # noqa: E402
 
 P = 8
@@ -24,7 +24,8 @@ def main():
     for inst in sorted(INSTANCES):
         for n in (4, 1024, 16384):
             x = generate_instance(inst, P, n).astype(np.int32)
-            out, info = psort(x, p=P, algorithm="auto", return_info=True)
+            out, info = psort(x, config=SortConfig(p=P, algorithm="auto"),
+                              return_info=True)
             ok = bool((np.asarray(out) == np.sort(x)).all())
             print(f"{inst:14s} {n:7d} {info['algorithm']:10s} {str(ok):6s} "
                   f"{info['balance']:7.2f} {info['overflow']}")
@@ -32,7 +33,8 @@ def main():
 
     # high emulated PE counts: the sim backend is not capped by devices
     x = generate_instance("Staggered", 128, 128 * 32).astype(np.int32)
-    out = psort(x, p=128, algorithm="rquick", backend="sim")
+    out = psort(x, config=SortConfig(p=128, algorithm="rquick",
+                                     backend="sim"))
     ok = bool((np.asarray(out) == np.sort(x)).all())
     print(f"\nsim backend: p=128 rquick sorted={ok}")
     assert ok

@@ -11,7 +11,7 @@ if "XLA_FLAGS" not in os.environ:
 
 import numpy as np                                     # noqa: E402
 
-from repro.core import psort                           # noqa: E402
+from repro.core import SortConfig, psort              # noqa: E402
 from repro.data.pipeline import length_balanced_batches  # noqa: E402
 from repro.data.distributions import generate_instance  # noqa: E402
 
@@ -31,7 +31,8 @@ def main():
     # 2) the robustness demo: the adversarial instances sort exactly
     for inst in ("Mirrored", "AllToOne", "DeterDupl", "Zero", "Staggered"):
         x = generate_instance(inst, 8, 8192).astype(np.int32)
-        out, info = psort(x, p=8, algorithm="rquick", return_info=True)
+        out, info = psort(x, config=SortConfig(p=8, algorithm="rquick"),
+                          return_info=True)
         assert (np.asarray(out) == np.sort(x)).all() and info["overflow"] == 0
         print(f"[example] rquick sorted {inst:10s} "
               f"(balance {info['balance']:.2f})")

@@ -9,7 +9,7 @@ import jax as _jax
 
 _jax.config.update("jax_enable_x64", True)
 
-from .api import psort, default_mesh          # noqa: E402,F401
+from .api import SortConfig, psort, default_mesh  # noqa: E402,F401
 from .external import ExternalPolicy          # noqa: E402,F401
 from .types import (SortShard, make_shard, merge_shards, local_sort,  # noqa: E402,F401
                     key_to_uint, uint_to_key, LocalKernelPolicy,

@@ -32,7 +32,9 @@ it is emulated via ``comm.sim_map(..., mesh=(d, p))``.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
+import warnings
 from functools import partial
 from typing import Dict, Optional
 
@@ -48,6 +50,126 @@ from .types import (SortShard, key_to_uint, local_kernels, make_shard,
                     pad_value, uint_to_key)
 
 BACKENDS = ("shard_map", "sim")
+
+# algorithms with a slotted exchange the streamed pipeline can overlap; the
+# rest (ppermute/all_gather structures) have nothing to stream and run the
+# barrier path under overlap=True unchanged (trivially bitwise-equal)
+_OVERLAP_ALGOS = ("rams", "ntb-ams", "ssort", "ns-ssort")
+
+
+@dataclasses.dataclass(frozen=True)
+class SortConfig:
+    """Everything that shapes one distributed sort, in one hashable object.
+
+    ``psort(keys, config=SortConfig(...))`` is the primary call style; the
+    jit caches key on the whole config, so two calls with equal configs hit
+    the same executable.  Fields group into:
+
+    **Topology** — ``p`` (PE count; read off ``mesh``/``mesh_shape`` when
+    omitted on shard_map), ``mesh`` (explicit device mesh, shard_map only;
+    excluded from equality/hash — pass the same mesh object to reuse the
+    cache), ``axis``/``data_axis`` (mesh axis names), ``mesh_shape`` +
+    ``mesh_axes`` (hierarchical nested-axis runs), ``levels`` (AMS level
+    count).
+
+    **Execution** — ``backend`` (``"shard_map"`` | ``"sim"``),
+    ``algorithm`` (``"auto"`` consults the cost model), ``cost_model``
+    (:class:`repro.core.selection.CostModel` machine profile),
+    ``capacity_factor`` (slack of the per-PE shard buffers).
+
+    **Resilience / streaming** — ``fault_policy``
+    (:class:`repro.runtime.failures.FaultPolicy`; mutable, excluded from
+    equality/hash), ``external``
+    (:class:`repro.core.external.ExternalPolicy` out-of-core streaming),
+    and ``overlap`` (pipeline every slotted exchange against the local
+    merge via ``comm.alltoall_stream`` — bitwise-identical output; a no-op
+    for algorithms without a slotted all_to_all).
+
+    ``algo_kw`` holds algorithm-specific keywords (``slot_factor``,
+    ``oracle_splitters``, ``tie_break``, …) as a sorted tuple of pairs —
+    :meth:`from_kwargs` splits a flat kwarg dict into fields and
+    ``algo_kw``, which is also what the legacy-kwarg shim uses.
+
+    See the README migration table for the legacy-kwarg ↔ field mapping.
+    """
+
+    # topology
+    p: Optional[int] = None
+    mesh: Optional[Mesh] = dataclasses.field(default=None, compare=False)
+    axis: str = "sort"
+    data_axis: str = "data"
+    mesh_shape: Optional[tuple] = None
+    mesh_axes: tuple = ("inter", "intra")
+    levels: Optional[int] = None
+    # execution
+    backend: str = "shard_map"
+    algorithm: str = "auto"
+    cost_model: Optional[selection.CostModel] = None
+    capacity_factor: float = 2.0
+    # resilience / streaming
+    fault_policy: Optional[object] = dataclasses.field(default=None,
+                                                       compare=False)
+    external: Optional[object] = None
+    overlap: bool = False
+    # algorithm-specific keywords, normalized to a sorted tuple of pairs
+    algo_kw: tuple = ()
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; expected "
+                             f"{BACKENDS}")
+        if self.mesh_shape is not None:
+            object.__setattr__(self, "mesh_shape",
+                               tuple(int(v) for v in self.mesh_shape))
+        object.__setattr__(self, "mesh_axes", tuple(self.mesh_axes))
+        kw = dict(self.algo_kw) if not isinstance(self.algo_kw, dict) \
+            else self.algo_kw
+        norm = {k: tuple(v) if isinstance(v, list) else v
+                for k, v in kw.items()}
+        object.__setattr__(self, "algo_kw", tuple(sorted(norm.items())))
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "SortConfig":
+        """Split a flat legacy-style kwarg dict into config fields plus
+        ``algo_kw`` (anything that is not a field)."""
+        cfg = {k: kw.pop(k) for k in list(kw) if k in _CONFIG_FIELDS}
+        return cls(algo_kw=kw, **cfg)
+
+    def replace(self, **changes) -> "SortConfig":
+        return dataclasses.replace(self, **changes)
+
+
+_CONFIG_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(SortConfig)) - {"algo_kw"}
+
+
+def _coerce_config(config, legacy: dict, caller: str) -> SortConfig:
+    """Resolve the (config | legacy kwargs) call styles to one SortConfig.
+
+    Exactly one :class:`DeprecationWarning` per legacy-style call; mixing
+    the styles is a :class:`TypeError`.  A bare int ``config`` is the old
+    positional ``p``.
+    """
+    if isinstance(config, (int, np.integer)):      # legacy positional p
+        legacy = {"p": int(config), **legacy}
+        config = None
+    if config is not None:
+        if legacy:
+            raise TypeError(
+                f"{caller}() got both config= and legacy keyword arguments "
+                f"{sorted(legacy)}; move them into the SortConfig")
+        if not isinstance(config, SortConfig):
+            raise TypeError(f"{caller}() config must be a SortConfig, got "
+                            f"{type(config).__name__}")
+        return config
+    if not legacy:
+        return SortConfig()
+    warnings.warn(
+        f"{caller}(keys, p=..., algorithm=..., ...) keyword style is "
+        f"deprecated; pass {caller}(..., config=SortConfig(...)) instead "
+        f"(field mapping: README 'Migrating to SortConfig')",
+        DeprecationWarning, stacklevel=3)
+    return SortConfig.from_kwargs(**legacy)
 
 
 def default_mesh(p: Optional[int] = None, axis: str = "sort") -> Mesh:
@@ -118,10 +240,10 @@ def _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw):
     return body
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
-                                   "out_capacity", "mesh", "algo_kw",
-                                   "pallas"))
-def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
+@partial(jax.jit, static_argnames=("cfg", "algorithm", "axis_name", "p",
+                                   "capacity", "out_capacity", "mesh",
+                                   "algo_kw", "pallas"))
+def _psort_jit(keys2d, counts, mesh, cfg, axis_name, p, algorithm, capacity,
                out_capacity, algo_kw, pallas):
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
 
@@ -135,18 +257,20 @@ def _psort_jit(keys2d, counts, mesh, axis_name, p, algorithm, capacity,
     return out
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "p", "capacity",
-                                   "out_capacity", "algo_kw", "pallas"))
-def _psort_sim_jit(keys2d, counts, axis_name, p, algorithm, capacity,
+@partial(jax.jit, static_argnames=("cfg", "algorithm", "axis_name", "p",
+                                   "capacity", "out_capacity", "algo_kw",
+                                   "pallas"))
+def _psort_sim_jit(keys2d, counts, cfg, axis_name, p, algorithm, capacity,
                    out_capacity, algo_kw, pallas):
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
     return comm.sim_map(body, axis_name, p)(keys2d, counts)
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis", "p",
-                                   "capacity", "out_capacity", "mesh",
-                                   "algo_kw", "pallas"))
-def _psort2_jit(keys3d, counts, mesh, axis_name, data_axis, p, algorithm,
+@partial(jax.jit, static_argnames=("cfg", "algorithm", "axis_name",
+                                   "data_axis", "p", "capacity",
+                                   "out_capacity", "mesh", "algo_kw",
+                                   "pallas"))
+def _psort2_jit(keys3d, counts, mesh, cfg, axis_name, data_axis, p, algorithm,
                 capacity, out_capacity, algo_kw, pallas):
     """Batched psort over the sort axis of a 2-D (data, sort) device mesh."""
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
@@ -162,21 +286,22 @@ def _psort2_jit(keys3d, counts, mesh, axis_name, data_axis, p, algorithm,
     return out
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis", "d",
-                                   "p", "capacity", "out_capacity", "algo_kw",
-                                   "pallas"))
-def _psort2_sim_jit(keys3d, counts, axis_name, data_axis, d, p, algorithm,
-                    capacity, out_capacity, algo_kw, pallas):
+@partial(jax.jit, static_argnames=("cfg", "algorithm", "axis_name",
+                                   "data_axis", "d", "p", "capacity",
+                                   "out_capacity", "algo_kw", "pallas"))
+def _psort2_sim_jit(keys3d, counts, cfg, axis_name, data_axis, d, p,
+                    algorithm, capacity, out_capacity, algo_kw, pallas):
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
     return comm.sim_map(body, axis_name, p, mesh=(d, p),
                         data_axis=data_axis)(keys3d, counts)
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis",
-                                   "axes", "p", "capacity", "out_capacity",
-                                   "mesh", "algo_kw", "pallas"))
-def _psort_nested_jit(keys_nd, counts, mesh, axis_name, data_axis, axes, p,
-                      algorithm, capacity, out_capacity, algo_kw, pallas):
+@partial(jax.jit, static_argnames=("cfg", "algorithm", "axis_name",
+                                   "data_axis", "axes", "p", "capacity",
+                                   "out_capacity", "mesh", "algo_kw",
+                                   "pallas"))
+def _psort_nested_jit(keys_nd, counts, mesh, cfg, axis_name, data_axis, axes,
+                      p, algorithm, capacity, out_capacity, algo_kw, pallas):
     """psort over the virtual flat axis of a nested (inter, intra) mesh.
 
     The body is the *same* per-PE body as the flat path; its collectives
@@ -201,28 +326,28 @@ def _psort_nested_jit(keys_nd, counts, mesh, axis_name, data_axis, axes, p,
     return out
 
 
-@partial(jax.jit, static_argnames=("algorithm", "axis_name", "data_axis", "d",
-                                   "axes", "p", "capacity", "out_capacity",
-                                   "algo_kw", "pallas"))
-def _psort_nested_sim_jit(keys_nd, counts, axis_name, data_axis, d, axes, p,
-                          algorithm, capacity, out_capacity, algo_kw, pallas):
+@partial(jax.jit, static_argnames=("cfg", "algorithm", "axis_name",
+                                   "data_axis", "d", "axes", "p", "capacity",
+                                   "out_capacity", "algo_kw", "pallas"))
+def _psort_nested_sim_jit(keys_nd, counts, cfg, axis_name, data_axis, d, axes,
+                          p, algorithm, capacity, out_capacity, algo_kw,
+                          pallas):
     body = _sort_body(axis_name, p, algorithm, capacity, out_capacity, algo_kw)
     return comm.sim_map(body, axis_name, p, nested=axes,
                         mesh=(d, p) if data_axis else None,
                         data_axis=data_axis)(keys_nd, counts)
 
 
-def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
-          mesh: Optional[Mesh] = None, axis: str = "sort",
-          data_axis: str = "data",
-          mesh_shape: Optional[tuple] = None,
-          mesh_axes: tuple = ("inter", "intra"),
-          levels: Optional[int] = None,
-          capacity_factor: float = 2.0, return_info: bool = False,
-          backend: str = "shard_map",
-          cost_model: Optional[selection.CostModel] = None,
-          fault_policy=None, external=None, **algo_kw):
+def psort(keys, config=None, *, return_info: bool = False, **legacy):
     """Sort a host array over the ``axis`` mesh axis with p (emulated) PEs.
+
+    ``config`` is a :class:`SortConfig` carrying every knob — topology,
+    execution, resilience/streaming and algorithm keywords.  The legacy
+    flat-kwarg style (``psort(x, p=4, algorithm="rquick", ...)``) still
+    works through a shim that builds the equivalent config and emits one
+    :class:`DeprecationWarning` per call; a bare int second argument is
+    the old positional ``p``.  Mixing ``config=`` with legacy kwargs is a
+    :class:`TypeError`.  See the README's "Migrating to SortConfig" table.
 
     Returns the sorted array (and an info dict with overflow / balance when
     ``return_info``).  1-D ``keys`` of shape (n,) are one global sort
@@ -294,24 +419,26 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     reduced topology.
 
     >>> import numpy as np
-    >>> from repro.core.api import psort
+    >>> from repro.core.api import SortConfig, psort
     >>> x = np.array([5, 3, 1, 4, 2, 9, 8, 6], np.int32)
-    >>> np.asarray(psort(x, p=4, algorithm="rquick", backend="sim"))
+    >>> cfg = SortConfig(p=4, algorithm="rquick", backend="sim")
+    >>> np.asarray(psort(x, config=cfg))
     array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
 
     A batch of rows sorts within per-row subgroups of a (d, p) mesh — the
     rows never exchange elements:
 
     >>> xs = np.stack([x, x[::-1] * 10])
-    >>> np.asarray(psort(xs, p=4, algorithm="rquick", backend="sim"))
+    >>> np.asarray(psort(xs, config=cfg))
     array([[ 1,  2,  3,  4,  5,  6,  8,  9],
            [10, 20, 30, 40, 50, 60, 80, 90]], dtype=int32)
 
     A hierarchical (2 × 2) mesh — same result, collectives split across
     the inter/intra axes:
 
-    >>> np.asarray(psort(x, mesh_shape=(2, 2), algorithm="rams",
-    ...                  backend="sim"))
+    >>> np.asarray(psort(x, config=SortConfig(mesh_shape=(2, 2),
+    ...                                       algorithm="rams",
+    ...                                       backend="sim")))
     array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
 
     A sort that loses PE 3 restarts at the reduced power-of-two topology
@@ -321,8 +448,7 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     >>> from repro.core.comm import FaultPlan, kill_pe
     >>> from repro.runtime.failures import FaultPolicy
     >>> pol = FaultPolicy(plan=FaultPlan((kill_pe(3),)))
-    >>> np.asarray(psort(x, p=4, algorithm="rquick", backend="sim",
-    ...                  fault_policy=pol))
+    >>> np.asarray(psort(x, config=cfg.replace(fault_policy=pol)))
     array([1, 2, 3, 4, 5, 6, 8, 9], dtype=int32)
     >>> [a["p"] for a in pol.attempts]
     [4, 2]
@@ -334,13 +460,19 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
 
     >>> from repro.core.external import ExternalPolicy
     >>> big = np.arange(64, dtype=np.int32)[::-1].copy()
-    >>> out = psort(big, p=4, backend="sim",
-    ...             external=ExternalPolicy(budget=4))
+    >>> out = psort(big, config=SortConfig(
+    ...     p=4, backend="sim", external=ExternalPolicy(budget=4)))
     >>> np.array_equal(np.asarray(out), np.sort(big))
     True
     """
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    cfg = _coerce_config(config, legacy, caller="psort")
+    p, algorithm, mesh = cfg.p, cfg.algorithm, cfg.mesh
+    axis, data_axis = cfg.axis, cfg.data_axis
+    mesh_shape, mesh_axes, levels = cfg.mesh_shape, cfg.mesh_axes, cfg.levels
+    capacity_factor, backend = cfg.capacity_factor, cfg.backend
+    cost_model, fault_policy = cfg.cost_model, cfg.fault_policy
+    external = cfg.external
+    algo_kw = dict(cfg.algo_kw)
     if levels is not None and algorithm not in ("auto", "rams", "ntb-ams"):
         raise ValueError(f"levels= applies to the multi-level AMS family "
                          f"(or 'auto'), not algorithm={algorithm!r}")
@@ -425,7 +557,8 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
             mesh_shape=(p_o, p_i) if mesh_shape is not None else None,
             mesh_axes=mesh_axes, levels=levels,
             capacity_factor=capacity_factor, return_info=return_info,
-            cost_model=cost_model, algo_kw=algo_kw, external=external)
+            cost_model=cost_model, algo_kw=algo_kw, external=external,
+            overlap=cfg.overlap)
 
     per = -(-max(n, 1) // p)                       # ceil(n/p)
     capacity = max(4, int(np.ceil(per * capacity_factor)))
@@ -436,7 +569,10 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
     if external is not None and (algorithm == "external"
                                  or per > external.budget):
         return _psort_external(u, n, orig_dtype, p=p, axis=axis,
-                               policy=external, return_info=return_info)
+                               policy=external, return_info=return_info,
+                               overlap=cfg.overlap)
+    if cfg.overlap and algorithm in _OVERLAP_ALGOS:
+        algo_kw.setdefault("overlap", True)
     if algorithm in ("rams", "ntb-ams"):
         if mesh_shape is not None:
             from .rams import nested_level_bits
@@ -465,11 +601,11 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
         da = data_axis if batched else None
         if backend == "shard_map":
             keys_out, idx_out, counts_out, overflow = _psort_nested_jit(
-                keys_nd, counts_nd, mesh, axis, da, axes, p, algorithm,
+                keys_nd, counts_nd, mesh, cfg, axis, da, axes, p, algorithm,
                 capacity, out_capacity, kw, pallas=pl)
         else:
             keys_out, idx_out, counts_out, overflow = _psort_nested_sim_jit(
-                keys_nd, counts_nd, axis, da, d, axes, p, algorithm,
+                keys_nd, counts_nd, cfg, axis, da, d, axes, p, algorithm,
                 capacity, out_capacity, kw, pallas=pl)
         keys_out = keys_out.reshape((d, p) + keys_out.shape[-1:])
         idx_out = idx_out.reshape((d, p) + idx_out.shape[-1:])
@@ -481,22 +617,22 @@ def psort(keys, p: Optional[int] = None, algorithm: str = "auto",
         counts = jnp.broadcast_to(row_counts, (d, p))
         if backend == "shard_map":
             keys_out, idx_out, counts_out, overflow = _psort2_jit(
-                keys3d, counts, mesh, axis, data_axis, p, algorithm,
+                keys3d, counts, mesh, cfg, axis, data_axis, p, algorithm,
                 capacity, out_capacity, kw, pallas=pl)
         else:
             keys_out, idx_out, counts_out, overflow = _psort2_sim_jit(
-                keys3d, counts, axis, data_axis, d, p, algorithm,
+                keys3d, counts, cfg, axis, data_axis, d, p, algorithm,
                 capacity, out_capacity, kw, pallas=pl)
     else:
         flat = jnp.full((p * per,), pad, u.dtype).at[:n].set(u)
         keys2d = flat.reshape(p, per)
         if backend == "shard_map":
             keys_out, idx_out, counts_out, overflow = _psort_jit(
-                keys2d, row_counts, mesh, axis, p, algorithm, capacity,
+                keys2d, row_counts, mesh, cfg, axis, p, algorithm, capacity,
                 out_capacity, kw, pallas=pl)
         else:
             keys_out, idx_out, counts_out, overflow = _psort_sim_jit(
-                keys2d, row_counts, axis, p, algorithm, capacity,
+                keys2d, row_counts, cfg, axis, p, algorithm, capacity,
                 out_capacity, kw, pallas=pl)
         keys_out, idx_out = keys_out[None], idx_out[None]
         counts_out, overflow = counts_out[None], overflow[None]
@@ -546,14 +682,15 @@ def _resolve_external(external, backend: str):
     return None
 
 
-def _psort_external(u, n, orig_dtype, *, p, axis, policy, return_info):
+def _psort_external(u, n, orig_dtype, *, p, axis, policy, return_info,
+                    overlap=False):
     """The non-fault ``psort(..., external=...)`` tail: run the four
     external passes once and reassemble the host output exactly like the
     in-core paths.  Ambient collectives decorators (``comm.counting()``)
     apply — the passes resolve ``impl`` per ``sim_map`` call."""
     from .external import _psort_external_once
     keys_out, idx_out, counts_out, overflow = _psort_external_once(
-        u, n, axis=axis, p=p, policy=policy, impl=None)
+        u, n, axis=axis, p=p, policy=policy, impl=None, overlap=overlap)
     rows = np.concatenate([keys_out[0, pe, :counts_out[0, pe]]
                            for pe in range(p)])
     result = uint_to_key(jnp.asarray(rows), orig_dtype)
@@ -641,7 +778,7 @@ def _psort_sim_once(u, n, d, batched, *, axis, data_axis, p, mesh_shape,
 def _psort_faulty(u, n, d, batched, orig_dtype, *, p, algorithm, policy,
                   axis, data_axis, mesh_shape, mesh_axes, levels,
                   capacity_factor, return_info, cost_model, algo_kw,
-                  external=None):
+                  external=None, overlap=False):
     """The ``psort(..., fault_policy=...)`` driver (sim backend).
 
     Attempt loop (bounded by ``repro.runtime.failures.run_with_restarts``):
@@ -691,13 +828,19 @@ def _psort_faulty(u, n, d, batched, orig_dtype, *, p, algorithm, policy,
         if ext:
             from .external import _psort_external_once
             out = _psort_external_once(u, n, axis=axis, p=p_cur,
-                                       policy=external, impl=fc)
+                                       policy=external, impl=fc,
+                                       overlap=overlap)
         else:
+            # overlap applies per attempt: the re-selected algorithm at the
+            # reduced p may or may not have a streamable exchange
+            kw_att = dict(algo_kw)
+            if overlap and algo in _OVERLAP_ALGOS:
+                kw_att.setdefault("overlap", True)
             out = _psort_sim_once(
                 u, n, d, batched, axis=axis, data_axis=data_axis, p=p_cur,
                 mesh_shape=ms, mesh_axes=mesh_axes, algorithm=algo,
                 capacity_factor=capacity_factor, levels=levels,
-                algo_kw=algo_kw, impl=fc)
+                algo_kw=kw_att, impl=fc)
         times = [policy.base_step_time * fc.fired_delays.get(pe, 1.0)
                  for pe in range(p_cur)]
         slow = flag_stragglers(times, k_mad=policy.k_mad,
@@ -756,13 +899,14 @@ def _psort_faulty(u, n, d, batched, orig_dtype, *, p, algorithm, policy,
     return result
 
 
-def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
-                      capacity_factor: float = 2.0, d: int = 1,
-                      mesh_shape: Optional[tuple] = None,
-                      mesh_axes: tuple = ("inter", "intra"),
-                      levels: Optional[int] = None, external=None,
-                      **algo_kw) -> comm.CommTrace:
+def trace_collectives(n: int, config=None, *args, d: int = 1,
+                      **legacy) -> comm.CommTrace:
     """Count the collectives one ``psort`` call would launch, per PE.
+
+    Takes the same :class:`SortConfig` as :func:`psort` (``d`` stays a
+    direct keyword — it sizes the trace mesh, not the sort).  The legacy
+    ``trace_collectives(n, p, algorithm, capacity_factor, ...)`` style
+    still works through the deprecation shim.
 
     Abstractly evaluates the sim-backend body (shapes only, no FLOPs, no
     compile) under a :class:`repro.core.comm.CountingCollectives` decorator
@@ -783,11 +927,12 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
     ``trace.by_tag()`` attributes it per level.  ``levels`` forwards to
     the AMS level schedule exactly as in :func:`psort`.
 
-    >>> from repro.core.api import trace_collectives
-    >>> t1 = trace_collectives(64, 8, "bitonic")
+    >>> from repro.core.api import SortConfig, trace_collectives
+    >>> bt = SortConfig(p=8, algorithm="bitonic")
+    >>> t1 = trace_collectives(64, bt)
     >>> t1.counts()["ppermute"] >= 6            # d·(d+1)/2 exchange rounds
     True
-    >>> t2 = trace_collectives(64, 8, "bitonic", d=4)
+    >>> t2 = trace_collectives(64, bt, d=4)
     >>> t2.summary() == t1.summary()            # per-PE trace: no d term
     True
 
@@ -795,7 +940,8 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
     level's all_to_all (plus the initial shuffle) — every other level is
     intra-only:
 
-    >>> t = trace_collectives(64 * 32, mesh_shape=(4, 16), algorithm="rams")
+    >>> t = trace_collectives(64 * 32, SortConfig(mesh_shape=(4, 16),
+    ...                                           algorithm="rams"))
     >>> t.filter(primitive="all_to_all", axis="inter").tags()
     ['level0', 'shuffle']
     >>> [tag for tag, s in sorted(t.by_tag().items())
@@ -810,13 +956,27 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
     (:meth:`repro.core.comm.CommTrace.io_bytes`) with per-pass tags:
 
     >>> from repro.core.external import ExternalPolicy
-    >>> t = trace_collectives(256, 4, external=ExternalPolicy(budget=16))
+    >>> t = trace_collectives(256, SortConfig(
+    ...     p=4, external=ExternalPolicy(budget=16)))
     >>> sorted(tag for tag in t.tags() if tag.startswith("ext:pass"))
     ['ext:pass0', 'ext:pass1', 'ext:pass2', 'ext:pass3']
     >>> t.io_bytes() > 0 and t.io_bytes() == t.filter(tag="ext:runs"
     ...     ).io_bytes() + t.filter(tag="ext:merge").io_bytes()
     True
     """
+    if args:
+        names = ("algorithm", "capacity_factor")
+        if len(args) > len(names):
+            raise TypeError(f"trace_collectives() takes at most "
+                            f"{len(names)} legacy positional arguments "
+                            f"after n/p ({names}); got {len(args)}")
+        legacy.update(zip(names, args))
+    cfg = _coerce_config(config, legacy, caller="trace_collectives")
+    p, algorithm = cfg.p, cfg.algorithm
+    capacity_factor, levels = cfg.capacity_factor, cfg.levels
+    mesh_shape, mesh_axes = cfg.mesh_shape, cfg.mesh_axes
+    external = cfg.external
+    algo_kw = dict(cfg.algo_kw)
     if external is not None:
         if d > 1 or mesh_shape is not None:
             raise ValueError("external tracing covers the 1-D flat axis "
@@ -829,7 +989,7 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
                                      dtype=np.int64).astype(np.uint32))
         counter = comm.CountingCollectives(comm.SIM)
         _psort_external_once(u, n, axis="sort", p=p, policy=external,
-                             impl=counter)
+                             impl=counter, overlap=cfg.overlap)
         return counter.trace
     axes = None
     if mesh_shape is not None:
@@ -844,8 +1004,11 @@ def trace_collectives(n: int, p: Optional[int] = None, algorithm: str = "auto",
     if p & (p - 1):
         raise ValueError(f"p={p} must be a power of two (hypercube layout)")
     if algorithm == "auto":
-        algorithm = selection.select_algorithm(n, p, levels=levels,
+        algorithm = selection.select_algorithm(n, p, model=cfg.cost_model,
+                                               levels=levels,
                                                mesh_shape=mesh_shape)
+    if cfg.overlap and algorithm in _OVERLAP_ALGOS:
+        algo_kw.setdefault("overlap", True)
     if algorithm in ("rams", "ntb-ams"):
         if mesh_shape is not None:
             from .rams import nested_level_bits

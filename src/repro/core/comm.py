@@ -116,6 +116,83 @@ class Collectives:
                    axis_index_groups=None, tiled=False):
         raise NotImplementedError
 
+    def alltoall_stream(self, x, axis_name, fold, init, gsize,
+                        axis_index_groups=None):
+        """Chunk-granular all_to_all: fold per-source blocks as they arrive.
+
+        ``x`` is a pytree of tiled per-destination buffers — every leaf has
+        ``shape[0]`` divisible by ``gsize``, laid out exactly like the input
+        of ``all_to_all(split_axis=0, concat_axis=0, tiled=True)``.  Instead
+        of returning the gathered buffer, the received data is delivered one
+        *source block* at a time: ``fold(carry, chunk, src)`` consumes the
+        block sent by group member ``src`` (a traced int32 group rank;
+        ``chunk`` leaves have shape ``(shape[0] // gsize, ...)``) and returns
+        the updated carry.  Returns the final carry.
+
+        Delivery-order contract: every source is delivered exactly once;
+        sources in ``[0, my_rank)`` arrive in ascending order, as do sources
+        in ``[my_rank, gsize)`` — the interleaving of the two runs is
+        implementation-defined (the ring implementations start at own rank
+        and wrap, the barrier fallback folds ``0..gsize-1``).  Consumers
+        must therefore be insensitive to the interleaving; the two-run
+        incremental merge in ``hypercube._alltoall_route(stream=True)`` is
+        the canonical such fold.
+
+        This default implementation is the *barrier* fallback: one regular
+        ``all_to_all``, then the blocks folded in ascending source order —
+        bitwise-identical to any conforming streaming implementation, and
+        inherited by backends without a chunked path (e.g.
+        :class:`NestedCollectives`).
+        """
+        recv = self.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                               axis_index_groups=axis_index_groups,
+                               tiled=True)
+        carry = init
+        for s in range(gsize):
+            chunk = jax.tree.map(
+                lambda v, s=s: v[s * (v.shape[0] // gsize):
+                                 (s + 1) * (v.shape[0] // gsize)], recv)
+            carry = fold(carry, chunk, jnp.int32(s))
+        return carry
+
+    def _stream_ring(self, x, axis_name, fold, init, gsize,
+                     axis_index_groups=None):
+        """Shared ring-scan ``alltoall_stream``: a ``lax.scan`` carries the
+        rotating send buffer (one ``ppermute`` per step, exactly the chunked
+        ring of ``SimCollectives``), and each step folds the block that just
+        arrived — at step t my block of group member (rank + t) mod g.  Used
+        by :class:`LaxCollectives` and :class:`SimCollectives`; delivery
+        starts at own rank and wraps, satisfying the two-ascending-runs
+        contract."""
+        for v in jax.tree.leaves(x):
+            assert v.shape[0] % gsize == 0, (v.shape, gsize)
+        if axis_index_groups is None or \
+                _is_full_identity_group(axis_index_groups):
+            perm = [((i + 1) % gsize, i) for i in range(gsize)]
+            r = self.axis_index(axis_name).astype(jnp.int32)
+        else:
+            members, rank = _group_tables(axis_index_groups)
+            assert members.shape[1] == gsize, (members.shape, gsize)
+            perm = _ring_perm(members, rank)
+            r = jnp.take(jnp.asarray(rank),
+                         self.axis_index(axis_name)).astype(jnp.int32)
+
+        def slice_mine(v):
+            blk = v.shape[0] // gsize
+            return jax.lax.dynamic_slice_in_dim(v, r * blk, blk, axis=0)
+
+        def step(carry, t):
+            buf, acc = carry
+            chunk = jax.tree.map(slice_mine, buf)
+            acc = fold(acc, chunk, ((r + t) % gsize).astype(jnp.int32))
+            buf = jax.tree.map(
+                lambda v: self.ppermute(v, axis_name, perm), buf)
+            return (buf, acc), None
+
+        (_, acc), _ = jax.lax.scan(step, (x, init),
+                                   jnp.arange(gsize, dtype=jnp.int32))
+        return acc
+
 
 class LaxCollectives(Collectives):
     """Forward to ``jax.lax`` — the shard_map / real-device path."""
@@ -142,6 +219,12 @@ class LaxCollectives(Collectives):
                                   concat_axis=concat_axis,
                                   axis_index_groups=axis_index_groups,
                                   tiled=tiled)
+
+    def alltoall_stream(self, x, axis_name, fold, init, gsize,
+                        axis_index_groups=None):
+        # lax.scan carries the rotating buffer; one ppermute per step.
+        return self._stream_ring(x, axis_name, fold, init, gsize,
+                                 axis_index_groups=axis_index_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -394,6 +477,22 @@ class CountingCollectives(Collectives):
                                      axis_index_groups=axis_index_groups,
                                      tiled=tiled)
 
+    def alltoall_stream(self, x, axis_name, fold, init, gsize,
+                        axis_index_groups=None):
+        # One event per delivered chunk, tagged ``ovl:<phase>`` — the gsize
+        # chunk events sum exactly to the barrier path's single all_to_all
+        # event for the same buffers (every leaf's shape[0] divides gsize).
+        # Recorded here rather than inside the ring: the scan body traces
+        # once, so counting the inner ppermutes would record one launch.
+        per_chunk = _payload_bytes(x) // max(int(gsize), 1)
+        tag = f"ovl:{_TAG.get() or ''}"
+        for _ in range(int(gsize)):
+            self.trace.add("all_to_all", per_chunk,
+                           self._gsize(axis_index_groups), axis=axis_name,
+                           tag=tag)
+        return self.inner.alltoall_stream(x, axis_name, fold, init, gsize,
+                                          axis_index_groups=axis_index_groups)
+
 
 @contextlib.contextmanager
 def counting(inner: Optional[Collectives] = None):
@@ -571,6 +670,15 @@ class FaultyCollectives(Collectives):
                                      concat_axis=concat_axis,
                                      axis_index_groups=axis_index_groups,
                                      tiled=tiled)
+
+    def alltoall_stream(self, x, axis_name, fold, init, gsize,
+                        axis_index_groups=None):
+        # One logical collective, one injection point: a stream counts as a
+        # single launch toward fault-plan ``after`` ordinals, same as the
+        # barrier all_to_all it replaces.
+        self._inject("all_to_all", axis_name)
+        return self.inner.alltoall_stream(x, axis_name, fold, init, gsize,
+                                          axis_index_groups=axis_index_groups)
 
 
 @contextlib.contextmanager
@@ -781,6 +889,14 @@ class SimCollectives(Collectives):
             return out.reshape((-1,) + out.shape[2:])     # (gsize*blk, ...)
 
         return jax.tree.map(one, x)
+
+    def alltoall_stream(self, x, axis_name, fold, init, gsize,
+                        axis_index_groups=None):
+        # Always the chunked ring (the very scan the grouped all_to_all
+        # uses for large leaves) — streaming is the point, so no one-shot
+        # gather fallback regardless of payload size.
+        return self._stream_ring(x, axis_name, fold, init, gsize,
+                                 axis_index_groups=axis_index_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -1055,6 +1171,12 @@ def all_to_all(x, axis_name, split_axis=0, concat_axis=0,
                                      concat_axis=concat_axis,
                                      axis_index_groups=axis_index_groups,
                                      tiled=tiled)
+
+
+def alltoall_stream(x, axis_name, fold, init, gsize, axis_index_groups=None):
+    return _CURRENT.get().alltoall_stream(
+        x, axis_name, fold, init, gsize,
+        axis_index_groups=axis_index_groups)
 
 
 # --- simulation runner -----------------------------------------------------

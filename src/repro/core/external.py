@@ -407,11 +407,20 @@ def _fit_splitters(sk, st, *, axis: str, p: int, impl):
 
 
 def _exchange_pass(kr, ir, counts, s_keys, s_ties, *, axis: str, p: int,
-                   slot_cap: int, impl, tag: str, use_kernel: bool):
+                   slot_cap: int, impl, tag: str, use_kernel: bool,
+                   overlap: bool = False):
     """Pass C, one run index: classify against the global splitters and
     route the run slices through one slotted all_to_all; each PE sorts
     what it received.  Returns host (p, p*slot_cap) sorted planes,
     (p,) counts, (p,) overflow.
+
+    ``overlap=True`` streams the route (``_alltoall_route(stream=True)``);
+    u32 keys then skip the post-exchange :func:`_sort_planes` entirely —
+    the streamed merge folds by the u64 (key, tie) composite, so the
+    received buffer already *is* the sorted planes.  u64 keys keep the
+    re-sort: their tie plane does not travel through the route, and the
+    recomputed (key, tie) lexsort is bitwise-identical either way because
+    ties are globally unique.
     """
     cap = kr.shape[1]
     sk_c, st_c = jnp.asarray(s_keys), jnp.asarray(s_ties)
@@ -434,7 +443,12 @@ def _exchange_pass(kr, ir, counts, s_keys, s_ties, *, axis: str, p: int,
                 keys = jnp.where(valid, k, _HI64)
             shard = SortShard(keys=keys, vals={"idx": i},
                               count=c.astype(jnp.int32))
-            out, ovf = _alltoall_route(shard, dest, axis, p, slot_cap)
+            out, ovf = _alltoall_route(shard, dest, axis, p, slot_cap,
+                                       stream=overlap)
+        if overlap and not wide:
+            ck = out.keys                     # sorted u64 composite
+            return ((ck >> np.uint64(32)).astype(jnp.uint32),
+                    ck.astype(jnp.uint32), out.vals["idx"], out.count, ovf)
         ko, to, io_ = _sort_planes(
             (out.keys >> np.uint64(32)).astype(jnp.uint32) if not wide
             else out.keys,
@@ -475,7 +489,8 @@ def _io_recorder(impl, tag: str, pe: Optional[int] = None):
 
 
 def _psort_external_once(u, n: int, *, axis: str, p: int,
-                         policy: ExternalPolicy, impl=None):
+                         policy: ExternalPolicy, impl=None,
+                         overlap: bool = False):
     """Run the four external passes once at the current topology.
 
     ``u`` is the full uint key array (host or device); returns host
@@ -483,6 +498,13 @@ def _psort_external_once(u, n: int, *, axis: str, p: int,
     overflow (1, p))`` — the same contract as ``_psort_sim_once``, so the
     fault driver's exclude-and-rescale loop composes unchanged.  Raises
     :class:`comm.PEFailure` at trace time under a matching fault plan.
+
+    ``overlap=True`` pipelines both ends of pass C: each slotted exchange
+    streams through ``comm.alltoall_stream``, and every received slice is
+    folded into a per-PE running merge (``merge_runs``, the kway-kernel
+    classifier engine when eligible) as soon as its pass lands, so pass D
+    finds the merge already done.  Bitwise-identical: ties are bijective
+    in the global index, so any merge order yields the same planes.
     """
     u = np.asarray(u)
     per = -(-max(n, 1) // p)
@@ -522,7 +544,10 @@ def _psort_external_once(u, n: int, *, axis: str, p: int,
 
     # --- pass C: per-run slotted exchanges --------------------------------
     received = [[] for _ in range(p)]
+    acc: List[Optional[Tuple]] = [None] * p   # overlap: running merge per PE
+    recv_counts = np.zeros(p, np.int64)
     overflow = np.zeros(p, np.int64)
+    io_merge = _io_recorder(impl, "ext:merge")
     for r in range(R):
         # provision the slot from the sketches (the capacity invariant)
         cap_rd = max(
@@ -540,21 +565,34 @@ def _psort_external_once(u, n: int, *, axis: str, p: int,
                 kr[pe, :len(k)], ir[pe, :len(k)], cr[pe] = k, i, len(k)
         ko, to, io_, co, oo = _exchange_pass(
             kr, ir, cr, s_keys, s_ties, axis=axis, p=p, slot_cap=slot_cap,
-            impl=impl, tag=f"ext:pass{r}", use_kernel=use_kernel)
+            impl=impl, tag=f"ext:pass{r}", use_kernel=use_kernel,
+            overlap=overlap)
         overflow += np.asarray(oo, np.int64)
         for pe in range(p):
             c = int(co[pe])
-            received[pe].append((ko[pe, :c], to[pe, :c], io_[pe, :c]))
+            recv_counts[pe] += c
+            sl = (ko[pe, :c], to[pe, :c], io_[pe, :c])
+            if overlap:
+                # fold the slice into the running merge while pass r+1's
+                # exchange is still ahead — pass D's merge is then a no-op
+                acc[pe] = sl if acc[pe] is None else merge_runs(
+                    [acc[pe], sl], budget=B, merge=policy.merge,
+                    sketch_per_run=s, use_kernel=use_kernel, io=io_merge)
+            else:
+                received[pe].append(sl)
 
     # --- pass D: merge barrier + per-PE k-way merge -----------------------
-    recv_counts = np.array([sum(len(k) for k, _, _ in received[pe])
-                            for pe in range(p)], np.int64)
     _merge_barrier(recv_counts, axis=axis, p=p, impl=impl)
-    io_merge = _io_recorder(impl, "ext:merge")
-    merged = [merge_runs(received[pe], budget=B, merge=policy.merge,
-                         sketch_per_run=s, use_kernel=use_kernel,
-                         io=io_merge)
-              for pe in range(p)]
+    if overlap:
+        empty = (np.zeros(0, u.dtype), np.zeros(0, np.uint32),
+                 np.zeros(0, np.uint32))
+        merged = [acc[pe] if acc[pe] is not None else empty
+                  for pe in range(p)]
+    else:
+        merged = [merge_runs(received[pe], budget=B, merge=policy.merge,
+                             sketch_per_run=s, use_kernel=use_kernel,
+                             io=io_merge)
+                  for pe in range(p)]
 
     out_counts = np.array([len(m[0]) for m in merged], np.int32)
     out_cap = max(4, int(out_counts.max(initial=1)))

@@ -20,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import comm
-from .types import SortShard, merge_shards, pad_value, compact, resize
+from .types import SortShard, local_sort, merge_shards, \
+    merge_sorted_shards, pad_value, compact, \
+    resize
 
 
 def xor_perm(p: int, j: int):
@@ -155,13 +157,17 @@ def hypercube_shuffle(shard: SortShard, axis_name: str, p: int, seed,
 
 def alltoall_shuffle(shard: SortShard, axis_name: str, p: int, seed,
                      slot_cap: Optional[int] = None,
-                     groups=None) -> Tuple[SortShard, jax.Array]:
+                     groups=None, stream: bool = False
+                     ) -> Tuple[SortShard, jax.Array]:
     """Direct random shuffle via one fused all-to-all (Helman et al. style).
 
     On TPU an all-to-all is a single hardware-routed collective, so the αp
     startup penalty the paper associates with direct delivery does not apply;
     volume is βn/p.  Slots are Chernoff-provisioned: targets are uniformly
     random, so per-destination counts concentrate around C/p.
+
+    ``stream=True`` pipelines the exchange against the local merge (see
+    :func:`_alltoall_route`): the result is then already locally *sorted*.
     """
     cap = shard.capacity
     if slot_cap is None:
@@ -171,16 +177,27 @@ def alltoall_shuffle(shard: SortShard, axis_name: str, p: int, seed,
     key = jax.random.fold_in(jax.random.PRNGKey(seed), me)
     dest = jax.random.randint(key, (cap,), 0, p).astype(jnp.int32)
     dest = jnp.where(shard.valid_mask(), dest, jnp.int32(p))  # pads → nowhere
-    return _alltoall_route(shard, dest, axis_name, p, slot_cap, groups)
+    return _alltoall_route(shard, dest, axis_name, p, slot_cap, groups,
+                           stream=stream)
 
 
 def _alltoall_route(shard: SortShard, dest: jax.Array, axis_name: str, p: int,
-                    slot_cap: int, groups=None) -> Tuple[SortShard, jax.Array]:
+                    slot_cap: int, groups=None,
+                    stream: bool = False) -> Tuple[SortShard, jax.Array]:
     """Scatter elements to ``dest`` PEs via slotted all-to-all buffers.
 
     ``dest`` is a per-element target in [0, p) (p = group size when grouped);
     invalid elements must carry dest == p.  Returns (shard, overflow); the
-    output shard is *unsorted* with capacity p*slot_cap.
+    output shard has capacity p*slot_cap and is *unsorted* on the barrier
+    path (``stream=False``).
+
+    ``stream=True`` replaces the barrier all_to_all with
+    :func:`comm.alltoall_stream`: each arriving per-source block is locally
+    sorted and folded into a running merge while later blocks are still in
+    flight, so the returned shard is already **sorted** (callers skip their
+    ``local_sort``).  Bitwise-identical to the barrier path followed by
+    ``local_sort`` — see :func:`_stream_route_merge` for the argument —
+    and ``overflow`` is computed sender-side, identically on both paths.
     """
     pad = shard.pad
     # slot index of each element within its destination bucket, via stable
@@ -214,6 +231,11 @@ def _alltoall_route(shard: SortShard, dest: jax.Array, axis_name: str, p: int,
     vals = {k: scatter(v, np.zeros((), v.dtype)) for k, v in shard.vals.items()}
     counts = jnp.minimum(sent_counts, slot_cap)                   # (p,)
 
+    if stream:
+        out = _stream_route_merge(keys, vals, counts, pad, axis_name, p,
+                                  slot_cap, groups)
+        return out, overflow
+
     a2a = lambda v: comm.all_to_all(v, axis_name, split_axis=0, concat_axis=0,
                                     axis_index_groups=groups, tiled=True)
     keys = a2a(keys).reshape(-1)
@@ -226,6 +248,94 @@ def _alltoall_route(shard: SortShard, dest: jax.Array, axis_name: str, p: int,
     valid = slot_idx < jnp.repeat(counts, slot_cap, total_repeat_length=p * slot_cap)
     out = compact(out.replace(count=jnp.int32(p * slot_cap)), valid)
     return out, overflow
+
+
+def _stream_route_merge(keys, vals, counts, pad, axis_name: str, p: int,
+                        slot_cap: int, groups) -> SortShard:
+    """Incremental-merge consumer of a streamed slotted exchange.
+
+    Each arriving per-source block is locally sorted *while later blocks
+    are still in flight* — that is the work the stream hides behind the
+    wire — and staged into a per-source run table at row ``src``.  Once the
+    stream drains, the ``p`` sorted runs collapse through a balanced k-way
+    merge tree (``log2 p`` levels of :func:`merge_sorted_shards`, lower
+    source rank on the left), so the consumer does O(C log p) merge work —
+    the same asymptotics as the barrier path's single post-shuffle sort —
+    instead of the O(C·p) a naive fold-into-one-accumulator would cost.
+
+    Staging by source rank makes the result invariant to the delivery
+    interleaving :func:`comm.alltoall_stream` leaves implementation-defined.
+    Ties across sources resolve left-run-first through every tree level,
+    i.e. globally ascending (source, slot) — exactly the (stable) order the
+    barrier path produces via ``compact`` + a full ``local_sort``, so both
+    paths are bitwise-identical.
+    """
+    cap_out = p * slot_cap
+
+    def empty():
+        return {
+            "keys": jnp.full((p, slot_cap), pad, keys.dtype),
+            "vals": {k: jnp.zeros((p, slot_cap) + v.shape[2:], v.dtype)
+                     for k, v in vals.items()},
+            "counts": jnp.zeros((p,), jnp.int32)}
+
+    def fold(acc, chunk, src):
+        ck = SortShard(
+            keys=chunk["keys"].reshape(-1),
+            vals={k: v.reshape((slot_cap,) + v.shape[2:])
+                  for k, v in chunk["vals"].items()},
+            count=chunk["counts"].reshape(()).astype(jnp.int32))
+        ck = local_sort(ck)           # overlapped with the in-flight blocks
+        src = src.astype(jnp.int32)
+        acc = dict(acc)
+        acc["keys"] = jax.lax.dynamic_update_slice(
+            acc["keys"], ck.keys[None], (src, jnp.int32(0)))
+        acc["vals"] = {
+            k: jax.lax.dynamic_update_slice(
+                acc["vals"][k], v[None],
+                (src,) + (jnp.int32(0),) * (v.ndim))
+            for k, v in ck.vals.items()}
+        acc["counts"] = acc["counts"].at[src].set(ck.count)
+        return acc
+
+    x = {"keys": keys, "vals": vals, "counts": counts.reshape(p, 1)}
+    st = comm.alltoall_stream(x, axis_name, fold, empty(), p,
+                              axis_index_groups=groups)
+
+    def pair_merge(a_keys, a_vals, a_count, b_keys, b_vals, b_count):
+        a = SortShard(keys=a_keys, vals=a_vals, count=a_count)
+        b = SortShard(keys=b_keys, vals=b_vals, count=b_count)
+        merged, _ = merge_sorted_shards(
+            a, b, capacity=a.capacity + b.capacity)  # never overflows
+        return merged.keys, merged.vals, merged.count
+
+    if p & (p - 1) == 0:
+        # power-of-two source count: one vmapped pair-merge per tree level
+        rk, rv, rc = st["keys"], st["vals"], st["counts"]
+        while rk.shape[0] > 1:
+            rk, rv, rc = jax.vmap(pair_merge)(
+                rk[0::2], {k: v[0::2] for k, v in rv.items()}, rc[0::2],
+                rk[1::2], {k: v[1::2] for k, v in rv.items()}, rc[1::2])
+        out = SortShard(keys=rk[0], vals={k: v[0] for k, v in rv.items()},
+                        count=rc[0])
+    else:
+        runs = [SortShard(keys=st["keys"][i],
+                          vals={k: v[i] for k, v in st["vals"].items()},
+                          count=st["counts"][i])
+                for i in range(p)]
+        while len(runs) > 1:
+            nxt = []
+            for i in range(0, len(runs) - 1, 2):
+                a, b = runs[i], runs[i + 1]
+                merged, _ = merge_sorted_shards(
+                    a, b, capacity=a.capacity + b.capacity)
+                nxt.append(merged)
+            if len(runs) % 2:
+                nxt.append(runs[-1])
+            runs = nxt
+        out = runs[0]
+    assert out.capacity == cap_out
+    return out
 
 
 # ---------------------------------------------------------------------------

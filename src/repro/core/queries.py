@@ -558,8 +558,8 @@ def trace_query(kind: str, n: int, p: int, *, batch: int = 1,
     if p < 1 or p & (p - 1):
         raise ValueError(f"p={p} must be a power of two")
     if kind == "sort":
-        from .api import trace_collectives
-        return trace_collectives(n, p)
+        from .api import SortConfig, trace_collectives
+        return trace_collectives(n, SortConfig(p=p))
     bits = np.dtype(dtype).itemsize * 8
     per = -(-max(n, 1) // p)
     use_window = bits == 32 and p > 1

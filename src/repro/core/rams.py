@@ -140,7 +140,8 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
          seed: int = 0xA35, levels: Optional[int] = None,
          level_bits: Optional[Sequence[int]] = None,
          oversample: int = 4, tie_break: bool = True,
-         shuffle: bool = True, slot_factor: float = 2.0) -> RAMSResult:
+         shuffle: bool = True, slot_factor: float = 2.0,
+         overlap: bool = False) -> RAMSResult:
     """Sort over the whole axis.  Requires uint32 keys (u64 keys would need
     a 128-bit sample composite; psort's key transform covers f32/i32/u32).
 
@@ -155,6 +156,11 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
     Each phase is traced under a :func:`repro.core.comm.tagged` scope
     (``shuffle``, ``level0``, ``level1``, …), so a counting backend
     attributes per-level launches and bytes.
+
+    ``overlap=True`` streams every slotted exchange (shuffle and levels)
+    through :func:`repro.core.comm.alltoall_stream`, folding arriving PE
+    blocks into a running merge instead of gathering-then-sorting —
+    bitwise-identical output, see ``hypercube._stream_route_merge``.
     """
     if shard.keys.dtype != jnp.uint32:
         raise ValueError("rams requires uint32 keys (use psort's transform)")
@@ -175,9 +181,12 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
         with comm.tagged("shuffle"):
             shard, ovf = alltoall_shuffle(
                 shard, axis_name, p, seed,
-                slot_cap=_slot_cap(cap, p, slot_factor))
+                slot_cap=_slot_cap(cap, p, slot_factor), stream=overlap)
         overflow = overflow + ovf
-    shard = local_sort(shard)
+        if not overlap:                     # streamed arrives sorted
+            shard = local_sort(shard)
+    else:
+        shard = local_sort(shard)
     # drop the shuffle's p·slot_cap slot buffer down to 2× the working
     # capacity — at p = 1024 the inflated buffer (≈112·cap) would otherwise
     # flow through every level's classifier and exchange.  The 2× keeps the
@@ -194,7 +203,8 @@ def rams(shard: SortShard, axis_name: str, p: int, *,
                                      seed=seed + 7919 * (lvl + 1),
                                      oversample=oversample,
                                      tie_break=tie_break,
-                                     slot_factor=slot_factor)
+                                     slot_factor=slot_factor,
+                                     overlap=overlap)
         overflow = overflow + ovf
         h -= b
     return RAMSResult(shard, overflow)
@@ -206,7 +216,8 @@ def _slot_cap(cap: int, p_sub: int, slot_factor: float) -> int:
 
 
 def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
-                *, seed, oversample, tie_break, slot_factor):
+                *, seed, oversample, tie_break, slot_factor,
+                overlap: bool = False):
     """One k-way splitting level within the 2^h-subcubes."""
     k = 1 << b
     p_sub = 1 << h
@@ -287,8 +298,9 @@ def _rams_level(shard: SortShard, axis_name: str, p: int, h: int, b: int,
     # --- 6. fused slotted all-to-all within the subcube --------------------
     out, ovf = _alltoall_route(shard, dest, axis_name, p_sub,
                                _slot_cap(cap, p_sub, slot_factor),
-                               groups=groups)
-    out = local_sort(out)
+                               groups=groups, stream=overlap)
+    if not overlap:                         # streamed arrives sorted
+        out = local_sort(out)
     # restore working capacity
     out, ovf2 = resize(out, cap)
     return out, ovf + ovf2

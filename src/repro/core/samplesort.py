@@ -36,7 +36,8 @@ class SSortResult(NamedTuple):
 def samplesort(shard: SortShard, axis_name: str, p: int, *,
                seed: int = 0x550, robust: bool = True,
                sample_factor: int = 16, slot_factor: float = 2.0,
-               oracle_splitters: Optional[jax.Array] = None) -> SSortResult:
+               oracle_splitters: Optional[jax.Array] = None,
+               overlap: bool = False) -> SSortResult:
     cap = shard.capacity
     me = comm.axis_index(axis_name)
     overflow = jnp.int32(0)
@@ -45,9 +46,10 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
 
     if robust:
         shard, ovf = alltoall_shuffle(shard, axis_name, p, seed,
-                                      slot_cap=slot_cap)
+                                      slot_cap=slot_cap, stream=overlap)
         overflow = overflow + ovf
-        shard = local_sort(shard)
+        if not overlap:                     # streamed arrives sorted
+            shard = local_sort(shard)
         # shrink the p·slot_cap shuffle buffer to 2× the working capacity
         # (full shrink would tighten the exchange slots; see rams.py)
         shard, ovf = resize(shard, min(shard.capacity, 2 * cap))
@@ -78,8 +80,10 @@ def samplesort(shard: SortShard, axis_name: str, p: int, *,
         (splitters >> np.uint64(32)).astype(jnp.uint32),
         splitters.astype(jnp.uint32),
         n_buckets=p, count=shard.count, want_pos=False)
-    out, ovf = _alltoall_route(shard, dest, axis_name, p, slot_cap)
+    out, ovf = _alltoall_route(shard, dest, axis_name, p, slot_cap,
+                               stream=overlap)
     overflow = overflow + ovf
-    out = local_sort(out)
+    if not overlap:                         # streamed arrives sorted
+        out = local_sort(out)
     out, ovf2 = resize(out, cap)
     return SSortResult(out, overflow + ovf2)

@@ -86,6 +86,14 @@ class CostModel:
     overlap: float = 0.0                     # copy/compute overlap fraction
     meta: Dict = dataclasses.field(default_factory=dict, compare=False)
 
+    def __post_init__(self):
+        # reject out-of-range profiles at load time instead of clamping at
+        # every cost evaluation — a fit that lands outside [0, 1] is a
+        # calibration bug, not a value to silently repair
+        if not (0.0 <= self.overlap <= 1.0):
+            raise ValueError(f"CostModel.overlap must be in [0, 1], got "
+                             f"{self.overlap}")
+
     # -- derived ----------------------------------------------------------
 
     def coll(self, p: float) -> float:
@@ -202,8 +210,11 @@ def cost_rams(n, p, levels=None, model: CostModel = DEFAULT_MODEL,
         return _cost_rams_nested(n, p, levels, m, mesh_shape)
     l = levels or max(1, min(3, round(d / 6)))
     k = p ** (1.0 / l)
+    # the streamed exchange pipeline (comm.alltoall_stream) hides a measured
+    # ``overlap`` fraction of every slotted a2a behind the incremental merge
+    ov = 1.0 - m.overlap
     return ((3 * l + 1) * m.coll(p)             # samples, hist, a2a / level
-            + m.beta * npp * (m.slot_overhead * l + 1)  # l exchanges + shuffle
+            + m.beta * npp * (m.slot_overhead * l + 1) * ov  # exch + shuffle
             + npp * _lg(n) / m.local_rate       # local sort
             + npp * l * _lg(k) / m.part_rate)   # k-way partition per level
 
@@ -216,11 +227,12 @@ def _cost_rams_nested(n, p, levels, m: CostModel, mesh_shape):
     (the 1410.6754 multi-level argument for why deep hierarchies win)."""
     p_o, p_i = mesh_shape
     npp = n / p
+    ov = 1.0 - m.overlap               # streamed-exchange discount (see flat)
     if p_o <= 1:                       # pure-intra: no slow-axis level
         l = levels or max(1, min(3, round(_d(p_i) / 6)))
         k = max(2.0, p_i ** (1.0 / l))
         return ((3 * l + 1) * m.coll_inner(p_i)
-                + m.b_inner * npp * (m.slot_overhead * l + 1)
+                + m.b_inner * npp * (m.slot_overhead * l + 1) * ov
                 + npp * _lg(n) / m.local_rate
                 + npp * l * _lg(k) / m.part_rate)
     l_i = 0 if p_i <= 1 or levels == 1 else \
@@ -230,10 +242,10 @@ def _cost_rams_nested(n, p, levels, m: CostModel, mesh_shape):
     # shuffle + level 0 span the whole mesh: one slow-axis stage plus one
     # intra stage each (the NestedCollectives decomposition)
     outer = (4 * m.coll(p) + 4 * m.coll_inner(p_i)
-             + m.beta * npp * (m.slot_overhead + 1)
-             + m.b_inner * npp * (m.slot_overhead + 1))
+             + m.beta * npp * (m.slot_overhead + 1) * ov
+             + m.b_inner * npp * (m.slot_overhead + 1) * ov)
     inner = (3 * l_i * m.coll_inner(p_i)
-             + m.b_inner * npp * m.slot_overhead * l_i)
+             + m.b_inner * npp * m.slot_overhead * l_i * ov)
     k = max(2.0, p ** (1.0 / l))
     local = npp * _lg(n) / m.local_rate + npp * l * _lg(k) / m.part_rate
     return outer + inner + local
@@ -255,7 +267,10 @@ def cost_ssort(n, p, model: CostModel = DEFAULT_MODEL):
     # every PE receives a Θ(p log p)-word sample volume — the term that
     # makes single-level sample sort need n = Ω(p²/log p) to be efficient
     # (paper §VII).  Each PE also scans the p-sized splitter set locally.
-    return (m.coll(p) * 3 + m.beta * (npp * m.slot_overhead + 16 * _lg(p) * p)
+    # Only the slotted data exchange streams — the sample gather does not.
+    return (m.coll(p) * 3
+            + m.beta * (npp * m.slot_overhead * (1.0 - m.overlap)
+                        + 16 * _lg(p) * p)
             + m.alpha_hop * _hops(p)
             + npp * _lg(n) / m.local_rate       # local sort
             + p / m.part_rate)                  # p-way splitter scan
@@ -279,7 +294,7 @@ def cost_external(n, p, budget, model: CostModel = DEFAULT_MODEL):
     npp = max(1.0, n / p)
     budget = max(1, budget)
     runs = max(1.0, math.ceil(npp / budget))
-    io = 6 * npp * m.io_b * (1.0 - min(1.0, max(0.0, m.overlap)))
+    io = 6 * npp * m.io_b * (1.0 - m.overlap)   # range-checked in __post_init__
     coll = (runs + 2) * m.coll(p)
     wire = m.beta * npp * m.slot_overhead
     local = 2 * npp * _lg(min(npp, budget)) / m.local_rate
@@ -332,12 +347,13 @@ COSTS = {
 QUERY_KINDS = ("sort", "top_k", "rank_of_key", "percentile", "range_query")
 
 
-def select_algorithm(n: int, p: int,
+def select_algorithm(n: int, p: Optional[int] = None,
                      model: Optional[CostModel] = None,
                      levels: Optional[int] = None,
                      mesh_shape=None, budget: Optional[int] = None,
                      query: Optional[str] = None, batch: int = 1,
-                     k: Optional[int] = None, bits: int = 32) -> str:
+                     k: Optional[int] = None, bits: int = 32,
+                     config=None) -> str:
     """The paper's four-regime selection: argmin of the model costs.
 
     GatherM's output lives on one PE (no balance guarantee) → only
@@ -368,7 +384,25 @@ def select_algorithm(n: int, p: int,
     data; an amortizing service keeps sorted answers resident and makes
     its own policy (see ``launch/sort_serve.py``).  Returns
     ``"selection"`` when the fast path wins, else the sort regime's name.
+
+    ``config`` (a :class:`repro.core.api.SortConfig`, duck-typed to avoid
+    the import cycle) fills any of p / model / levels / mesh_shape /
+    budget that were not passed directly — the same defaults ``psort``
+    itself would consult for that config.
     """
+    if config is not None:
+        p = p if p is not None else config.p
+        model = model if model is not None else config.cost_model
+        levels = levels if levels is not None else config.levels
+        mesh_shape = mesh_shape if mesh_shape is not None \
+            else config.mesh_shape
+        if budget is None and config.external is not None:
+            budget = config.external.budget
+    if p is None and mesh_shape is not None:
+        p = int(mesh_shape[0]) * int(mesh_shape[1])
+    if p is None:
+        raise TypeError("select_algorithm() needs p — directly or via "
+                        "config=SortConfig(p=... | mesh_shape=...)")
     m = model if model is not None else DEFAULT_MODEL
     if query is not None and query != "sort":
         if query not in QUERY_KINDS:

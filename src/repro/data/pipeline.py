@@ -57,11 +57,12 @@ def length_balanced_batches(lengths: np.ndarray, batch: int, p: int = None,
     padding_waste_ratio_before, after).
     """
     import jax
-    from repro.core.api import psort
+    from repro.core.api import SortConfig, psort
 
     n = len(lengths)
     p = p or min(8, len(jax.devices()))
-    out, info = psort(lengths.astype(np.int32), p=p, algorithm=algorithm,
+    out, info = psort(lengths.astype(np.int32),
+                      config=SortConfig(p=p, algorithm=algorithm),
                       return_info=True)
     order = np.asarray(info["perm"]).astype(np.int64)
     nb = n // batch

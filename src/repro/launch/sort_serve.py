@@ -41,7 +41,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core import psort, queries, selection
+from repro.core import SortConfig, psort, queries, selection
 from repro.core.queries import QUERY_KINDS
 
 
@@ -95,19 +95,36 @@ class Result:
 class SortService:
     """Continuous-batching query service over one resident dataset."""
 
-    def __init__(self, keys, p: int, *, backend: str = "sim",
+    def __init__(self, keys, p: Optional[int] = None, *,
+                 config: Optional[SortConfig] = None, backend: str = "sim",
                  axis: str = "sort", mesh=None, policy: str = "auto",
                  model: Optional[selection.CostModel] = None,
                  max_batch: int = 64, clock=time.perf_counter):
+        """``config`` (a :class:`repro.core.SortConfig`) carries the sort
+        knobs (p / backend / axis / mesh / cost_model / overlap / ...);
+        the direct keywords remain as the legacy spelling and default
+        ``backend="sim"`` (a service usually fronts emulated PEs).  The
+        service-level knobs — ``policy``, ``max_batch``, ``clock`` — are
+        not sort parameters and stay direct-only."""
         if policy not in ("auto", "selection", "fullsort"):
             raise ValueError(f"unknown policy {policy!r}")
+        if config is None:
+            config = SortConfig(p=p, backend=backend, axis=axis, mesh=mesh,
+                                cost_model=model)
+        elif p is not None and config.p not in (None, p):
+            raise ValueError(f"p={p} inconsistent with config.p={config.p}")
+        elif config.p is None and p is not None:
+            config = config.replace(p=p)
+        if config.p is None:
+            raise ValueError("SortService needs p (directly or via config)")
+        self.config = config
         self.keys = np.asarray(keys)
-        self.data = queries.shard_data(self.keys, p)
-        self.backend = backend
-        self.axis = axis
-        self.mesh = mesh
+        self.data = queries.shard_data(self.keys, config.p)
+        self.backend = config.backend
+        self.axis = config.axis
+        self.mesh = config.mesh
         self.policy = policy
-        self.model = model
+        self.model = config.cost_model
         self.max_batch = max_batch
         self.clock = clock
         self.queue: deque = deque()
@@ -139,7 +156,7 @@ class SortService:
             return self.policy
         ks = [r.arg for r in self.queue if r.kind == "top_k"]
         verdict = selection.select_algorithm(
-            self.data.n, self.data.p, model=self.model, query=kind,
+            self.data.n, self.data.p, config=self.config, query=kind,
             batch=batch, k=max(ks) if ks else None, bits=self._bits)
         return "selection" if verdict == "selection" else "fullsort"
 
@@ -147,9 +164,8 @@ class SortService:
 
     def _full_sorted(self) -> np.ndarray:
         if self._sorted is None:
-            self._sorted = psort(self.keys, p=self.data.p,
-                                 backend=self.backend, axis=self.axis,
-                                 mesh=self.mesh)
+            self._sorted = psort(self.keys,
+                                 config=self.config.replace(p=self.data.p))
         return self._sorted
 
     def _answer_selection(self, kind: str, args: list):
@@ -306,7 +322,8 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed)
     keys = rng.integers(0, 1 << 32, size=args.n).astype(np.int64)
-    svc = SortService(keys, args.p, backend=args.backend,
+    svc = SortService(keys, config=SortConfig(p=args.p,
+                                              backend=args.backend),
                       policy=args.policy, max_batch=args.max_batch)
     mix = parse_mix(args.mix)
     pool = keys[rng.integers(0, args.n, size=256)]

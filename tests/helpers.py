@@ -1,14 +1,14 @@
 """Shared helpers: the sort-correctness contract every algorithm must meet."""
 import numpy as np
 
-from repro.core.api import psort
+from repro.core.api import SortConfig, psort
 
 
 def check_sort(x, p, algorithm, *, check_balance=False, expect_overflow=False,
                **kw):
     """Assert output == np.sort(input), exact multiset, zero overflow."""
-    out, info = psort(np.asarray(x), p=p, algorithm=algorithm,
-                      return_info=True, **kw)
+    cfg = SortConfig.from_kwargs(p=p, algorithm=algorithm, **kw)
+    out, info = psort(np.asarray(x), config=cfg, return_info=True)
     out = np.asarray(out)
     ref = np.sort(np.asarray(x))
     if expect_overflow:

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import comm
-from repro.core.api import _sort_body, trace_collectives
+from repro.core.api import SortConfig, _sort_body, trace_collectives
 from repro.runtime.compat import shard_map
 
 PP = 8
@@ -173,7 +173,8 @@ def test_counting_scope_survives_sim_map():
     from repro.core.api import psort
     x = np.random.default_rng(9).integers(0, 1000, 97).astype(np.int32)
     with comm.counting() as tr:
-        out = psort(x, p=PP, algorithm="rquick", backend="sim")
+        out = psort(x, config=SortConfig(p=PP, algorithm="rquick",
+                                         backend="sim"))
     assert (np.asarray(out) == np.sort(x)).all()
     assert tr.launches > 0 and tr.counts()["ppermute"] > 0
 
@@ -181,11 +182,11 @@ def test_counting_scope_survives_sim_map():
 def test_trace_collectives_shapes_of_table1():
     """The counted traces reproduce Table I's structure: hypercube
     algorithms are all point-to-point; RAMS launches fused collectives."""
-    t_rquick = trace_collectives(64 * PP, PP, "rquick")
+    t_rquick = trace_collectives(64 * PP, SortConfig(p=PP, algorithm="rquick"))
     assert t_rquick.p2p_launches > 0 and t_rquick.fused_launches == 0
-    t_rams = trace_collectives(64 * PP, PP, "rams")
+    t_rams = trace_collectives(64 * PP, SortConfig(p=PP, algorithm="rams"))
     assert t_rams.fused_launches > 0
     assert t_rams.wire_bytes() > 0
     # gatherm: d = log2 p exchange steps of the binomial tree
-    t_g = trace_collectives(PP // 2, PP, "gatherm")
+    t_g = trace_collectives(PP // 2, SortConfig(p=PP, algorithm="gatherm"))
     assert t_g.counts()["ppermute"] >= 3

@@ -1,0 +1,142 @@
+"""SortConfig: the consolidated psort surface and its deprecation shim.
+
+Satellite contract of the overlap PR: ``psort(keys, config=SortConfig(...))``
+is the primary signature; every legacy flat-kwarg spelling still works but
+emits **exactly one** DeprecationWarning per call and produces bitwise
+identical output; mixing the styles is a TypeError.  The config is frozen
+and hashable (it keys psort's jit cache) and round-trips through
+``from_kwargs`` / ``replace``.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import SortConfig, psort, trace_collectives
+from repro.core.selection import CostModel, select_algorithm
+from repro.data.distributions import generate_instance
+
+
+def _legacy_call(fn, *args, **kw):
+    """Run a deliberately legacy-style call, swallowing its warning (the
+    suite runs under -W error::DeprecationWarning in the CI deprecation
+    lane — these are the only sanctioned legacy call sites)."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*args, **kw)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    return out, dep
+
+
+# ---------------------------------------------------------------------------
+# The dataclass itself.
+# ---------------------------------------------------------------------------
+
+
+def test_config_frozen_hashable_and_replace():
+    cfg = SortConfig(p=8, algorithm="rams", backend="sim")
+    with pytest.raises(AttributeError):
+        cfg.p = 4
+    assert hash(cfg) == hash(SortConfig(p=8, algorithm="rams", backend="sim"))
+    cfg2 = cfg.replace(overlap=True)
+    assert cfg2.overlap and not cfg.overlap and cfg2.p == 8
+    assert cfg != cfg2
+
+
+def test_config_from_kwargs_splits_algo_kw():
+    cfg = SortConfig.from_kwargs(p=8, algorithm="rams", levels=2,
+                                 level_bits=(2, 1))
+    assert cfg.p == 8 and cfg.levels == 2
+    # non-field kwargs land in algo_kw, normalized to sorted pairs
+    assert dict(cfg.algo_kw) == {"level_bits": (2, 1)}
+    # dict-style algo_kw normalizes to the same hashable tuple
+    assert cfg == SortConfig(p=8, algorithm="rams", levels=2,
+                             algo_kw={"level_bits": [2, 1]})
+
+
+def test_config_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        SortConfig(backend="nope")
+
+
+def test_cost_model_overlap_range_checked_at_load():
+    with pytest.raises(ValueError, match="overlap"):
+        CostModel(overlap=1.5)
+    with pytest.raises(ValueError, match="overlap"):
+        CostModel(overlap=-0.1)
+    assert CostModel(overlap=0.0).overlap == 0.0
+    assert CostModel(overlap=1.0).overlap == 1.0
+    # the JSON loader goes through __post_init__ too
+    with pytest.raises(ValueError, match="overlap"):
+        CostModel.from_json(
+            CostModel().to_json().replace('"overlap": 0.0', '"overlap": 2.0'))
+
+
+# ---------------------------------------------------------------------------
+# The deprecation shim.
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_psort_warns_once_and_matches_bitwise():
+    x = generate_instance("Staggered", 8, 32 * 8, seed=3).astype(np.int32)
+    (out_l, info_l), dep = _legacy_call(
+        psort, x, p=8, algorithm="rquick", backend="sim", return_info=True)
+    assert len(dep) == 1, [str(w.message) for w in dep]
+    assert "SortConfig" in str(dep[0].message)
+    out_c, info_c = psort(x, config=SortConfig(p=8, algorithm="rquick",
+                                               backend="sim"),
+                          return_info=True)
+    assert (np.asarray(out_l) == np.asarray(out_c)).all()
+    assert (info_l["perm"] == info_c["perm"]).all()
+    assert info_l["overflow"] == info_c["overflow"] == 0
+
+
+def test_legacy_positional_p_still_works():
+    x = np.arange(64, dtype=np.int32)[::-1].copy()
+    (out, _), dep = _legacy_call(psort, x, 4, algorithm="rquick",
+                                 backend="sim", return_info=True)
+    assert len(dep) == 1
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_mixing_config_and_legacy_kwargs_is_an_error():
+    x = np.arange(16, dtype=np.int32)
+    with pytest.raises(TypeError, match="legacy"):
+        psort(x, config=SortConfig(p=4, backend="sim"), algorithm="rquick")
+    with pytest.raises(TypeError, match="SortConfig"):
+        psort(x, config={"p": 4})
+
+
+def test_config_style_emits_no_warning():
+    x = np.arange(32, dtype=np.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        out = psort(x, config=SortConfig(p=4, algorithm="rquick",
+                                         backend="sim"))
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_legacy_trace_collectives_matches_config_style():
+    t_c = trace_collectives(256, SortConfig(p=8, algorithm="rams"))
+    t_l, dep = _legacy_call(trace_collectives, 256, 8, "rams")
+    assert len(dep) == 1
+    assert t_l.summary() == t_c.summary()
+
+
+def test_select_algorithm_accepts_config():
+    cfg = SortConfig(p=1024)
+    assert select_algorithm(2**20 * 1024, config=cfg) == \
+        select_algorithm(2**20 * 1024, 1024) == "rams"
+    # direct args override config fields
+    assert select_algorithm(max(1, 1024 // 243), config=cfg) == "gatherm"
+
+
+def test_sort_service_accepts_config():
+    from repro.launch.sort_serve import SortService
+    keys = generate_instance("Uniform", 4, 256, seed=5).astype(np.int64)
+    svc = SortService(keys, config=SortConfig(p=4, backend="sim"))
+    assert svc.config.p == 4
+    with pytest.raises(ValueError, match="inconsistent"):
+        SortService(keys, p=8, config=SortConfig(p=4))
+    with pytest.raises(ValueError, match="p"):
+        SortService(keys, config=SortConfig())

@@ -14,7 +14,7 @@ instances and the p = 64 sim sweep are marked ``slow``.
 import numpy as np
 import pytest
 
-from repro.core.api import psort
+from repro.core.api import SortConfig, psort
 from repro.data.distributions import INSTANCES, generate_instance
 from helpers import check_sort
 
@@ -71,9 +71,10 @@ def test_gather_matrix(algorithm, instance, p):
 def test_sim_matches_shard_map_bitwise(algorithm):
     p = 8
     x = generate_instance("Uniform", p, 53 * p, seed=11).astype(np.int32)
-    out_sm, info_sm = psort(x, p=p, algorithm=algorithm, return_info=True)
-    out_sim, info_sim = psort(x, p=p, algorithm=algorithm, return_info=True,
-                              backend="sim")
+    cfg = SortConfig(p=p, algorithm=algorithm)
+    out_sm, info_sm = psort(x, config=cfg, return_info=True)
+    out_sim, info_sim = psort(x, config=cfg.replace(backend="sim"),
+                              return_info=True)
     assert (np.asarray(out_sm) == np.asarray(out_sim)).all()
     assert (info_sm["perm"] == info_sim["perm"]).all()
     assert (info_sm["counts"] == info_sim["counts"]).all()
@@ -91,7 +92,8 @@ def test_sim_matches_shard_map_bitwise(algorithm):
 def test_sim_p64_all_algorithms(algorithm):
     p = 64
     x = generate_instance("Uniform", p, 48 * p, seed=5).astype(np.int32)
-    out = psort(x, p=p, algorithm=algorithm, backend="sim")
+    out = psort(x, config=SortConfig(p=p, algorithm=algorithm,
+                                     backend="sim"))
     assert (np.asarray(out) == np.sort(x)).all()
 
 
@@ -136,8 +138,10 @@ def test_sim_p1024_auto_uses_measured_structure():
     from repro.core.selection import CostModel
     p = 1024
     x = generate_instance("Uniform", p, 8 * p).astype(np.int32)
-    out, info = psort(x, p=p, algorithm="auto", backend="sim",
-                      return_info=True, cost_model=CostModel(name="t"))
+    out, info = psort(x, config=SortConfig(p=p, algorithm="auto",
+                                           backend="sim",
+                                           cost_model=CostModel(name="t")),
+                      return_info=True)
     assert (np.asarray(out) == np.sort(x)).all()
     assert info["algorithm"] in ("gatherm", "rfis", "rquick", "rams")
 
@@ -145,6 +149,8 @@ def test_sim_p1024_auto_uses_measured_structure():
 def test_sim_rejects_bad_args():
     x = np.arange(16, dtype=np.int32)
     with pytest.raises(ValueError):
-        psort(x, algorithm="rquick", backend="sim")        # p required
+        psort(x, config=SortConfig(algorithm="rquick",
+                                   backend="sim"))        # p required
     with pytest.raises(ValueError):
-        psort(x, p=4, algorithm="rquick", backend="nope")  # unknown backend
+        psort(x, config=SortConfig(p=4, algorithm="rquick",
+                                   backend="nope"))       # unknown backend

@@ -23,7 +23,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import ExternalPolicy, psort, select_algorithm
-from repro.core.api import trace_collectives
+from repro.core.api import SortConfig, trace_collectives
 from repro.core import external as ext
 from repro.core.selection import CostModel, cost_external, regime_table
 from repro.data.distributions import INSTANCES, generate_instance
@@ -57,10 +57,11 @@ def test_external_matches_incore_bitwise(algorithm, instance):
     """external output == in-core output == np.sort, bitwise, at ~5 runs
     per PE (per = 37, budget = 8)."""
     x = generate_instance(instance, P, 37 * P).astype(np.int32)
-    out_ic = np.asarray(psort(x, p=P, algorithm=algorithm, backend="sim"))
-    out_ex, info = psort(x, p=P, backend="sim",
-                         external=ExternalPolicy(budget=8),
-                         return_info=True)
+    out_ic = np.asarray(psort(x, config=SortConfig(
+        p=P, algorithm=algorithm, backend="sim")))
+    out_ex, info = psort(x, config=SortConfig(
+        p=P, backend="sim", external=ExternalPolicy(budget=8)),
+        return_info=True)
     out_ex = np.asarray(out_ex)
     assert info["algorithm"] == "external"
     assert info["overflow"] == 0
@@ -75,9 +76,9 @@ def test_external_run_count_sweep(runs):
     """2–8 runs per PE, same answer every time (per = 40)."""
     x = generate_instance("Staggered", P, 40 * P).astype(np.int32)
     budget = -(-40 // runs)
-    out, info = psort(x, p=P, backend="sim",
-                      external=ExternalPolicy(budget=budget),
-                      return_info=True)
+    out, info = psort(x, config=SortConfig(
+        p=P, backend="sim", external=ExternalPolicy(budget=budget)),
+        return_info=True)
     assert info["external"]["runs"] == runs
     assert (np.asarray(out) == np.sort(x)).all()
 
@@ -86,25 +87,27 @@ def test_external_wide_key_path():
     """u64 keys (int64 beyond the u32 range) take the plane/lexsort path."""
     rng = np.random.default_rng(7)
     x = rng.integers(-2**62, 2**62, size=200, dtype=np.int64)
-    out = psort(x, p=4, backend="sim", external=ExternalPolicy(budget=8))
+    out = psort(x, config=SortConfig(p=4, backend="sim",
+                               external=ExternalPolicy(budget=8)))
     assert (np.asarray(out) == np.sort(x)).all()
 
 
 def test_external_losertree_engine_matches_classifier():
     x = generate_instance("g-Group", P, 37 * P).astype(np.int32)
-    a = np.asarray(psort(x, p=P, backend="sim",
-                         external=ExternalPolicy(budget=8)))
-    b = np.asarray(psort(x, p=P, backend="sim",
-                         external=ExternalPolicy(budget=8,
-                                                 merge="losertree")))
+    a = np.asarray(psort(x, config=SortConfig(
+        p=P, backend="sim", external=ExternalPolicy(budget=8))))
+    b = np.asarray(psort(x, config=SortConfig(
+        p=P, backend="sim",
+        external=ExternalPolicy(budget=8, merge="losertree"))))
     assert (a == b).all() and (a == np.sort(x)).all()
 
 
 def test_external_deterministic():
     x = generate_instance("RandDupl", P, 37 * P).astype(np.int32)
     pol = ExternalPolicy(budget=8)
-    a = np.asarray(psort(x, p=P, backend="sim", external=pol))
-    b = np.asarray(psort(x, p=P, backend="sim", external=pol))
+    cfg = SortConfig(p=P, backend="sim", external=pol)
+    a = np.asarray(psort(x, config=cfg))
+    b = np.asarray(psort(x, config=cfg))
     assert (a == b).all()
 
 
@@ -112,8 +115,9 @@ def test_external_deterministic():
 def test_external_degenerate_sizes(n):
     """n < p, n < budget, empty input."""
     x = np.arange(n, dtype=np.int32)[::-1].copy()
-    out = psort(x, p=4, backend="sim",
-                external=ExternalPolicy(budget=4, slot_factor=2.0))
+    out = psort(x, config=SortConfig(
+        p=4, backend="sim",
+        external=ExternalPolicy(budget=4, slot_factor=2.0)))
     assert (np.asarray(out) == np.sort(x)).all()
 
 
@@ -121,8 +125,9 @@ def test_external_8x_budget_acceptance():
     """Acceptance: n/p >= 8× the device budget sorts correctly."""
     p = 4
     x = generate_instance("Uniform", p, 128 * p).astype(np.int32)
-    out, info = psort(x, p=p, backend="sim",
-                      external=ExternalPolicy(budget=16), return_info=True)
+    out, info = psort(x, config=SortConfig(
+        p=p, backend="sim", external=ExternalPolicy(budget=16)),
+        return_info=True)
     assert info["external"]["runs"] == 8
     assert (np.asarray(out) == np.sort(x)).all()
 
@@ -130,7 +135,8 @@ def test_external_8x_budget_acceptance():
 def test_external_env_flag(monkeypatch):
     monkeypatch.setenv("REPRO_EXTERNAL_BUDGET", "8")
     x = generate_instance("Uniform", 4, 32 * 4).astype(np.int32)
-    out, info = psort(x, p=4, backend="sim", return_info=True)
+    out, info = psort(x, config=SortConfig(p=4, backend="sim"),
+                      return_info=True)
     assert info["algorithm"] == "external"
     assert (np.asarray(out) == np.sort(x)).all()
 
@@ -143,11 +149,13 @@ def test_external_policy_validation():
     with pytest.raises(ValueError, match="sketch_per_run"):
         ExternalPolicy(budget=4, sketch_per_run=0)
     with pytest.raises(ValueError, match="sim"):
-        psort(np.arange(8, dtype=np.int32), p=2, backend="shard_map",
-              external=ExternalPolicy(budget=2))
+        psort(np.arange(8, dtype=np.int32),
+              config=SortConfig(p=2, backend="shard_map",
+                                external=ExternalPolicy(budget=2)))
     with pytest.raises(ValueError, match="external"):
-        psort(np.arange(8, dtype=np.int32), p=2, backend="sim",
-              algorithm="external")
+        psort(np.arange(8, dtype=np.int32),
+              config=SortConfig(p=2, backend="sim",
+                                algorithm="external"))
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +164,8 @@ def test_external_policy_validation():
 
 
 def test_trace_per_pass_attribution():
-    t = trace_collectives(256, 4, external=ExternalPolicy(budget=16))
+    t = trace_collectives(256, SortConfig(
+        p=4, external=ExternalPolicy(budget=16)))
     tags = set(t.tags())
     assert {"ext:splitters", "ext:pass0", "ext:pass3", "ext:merge"} <= tags
     # every pass moved wire bytes through the slotted a2a
@@ -177,9 +186,10 @@ def test_trace_per_pass_attribution():
 
 def test_trace_double_buffer_io_invariant():
     """Double buffering reorders the copies but moves the same bytes."""
-    t1 = trace_collectives(256, 4, external=ExternalPolicy(budget=16))
-    t2 = trace_collectives(256, 4, external=ExternalPolicy(
-        budget=16, double_buffer=False))
+    t1 = trace_collectives(256, SortConfig(
+        p=4, external=ExternalPolicy(budget=16)))
+    t2 = trace_collectives(256, SortConfig(p=4, external=ExternalPolicy(
+        budget=16, double_buffer=False)))
     assert t1.io_bytes() == t2.io_bytes()
     assert t1.wire_bytes() == t2.wire_bytes()
 
@@ -264,8 +274,9 @@ def test_external_never_overflows_on_skew():
     distributions at the proven slot_factor=1.0."""
     for instance in ("AllToOne", "Zero", "Staggered", "DeterDupl"):
         x = generate_instance(instance, P, 37 * P).astype(np.int32)
-        _, info = psort(x, p=P, backend="sim",
-                        external=ExternalPolicy(budget=8), return_info=True)
+        _, info = psort(x, config=SortConfig(
+            p=P, backend="sim", external=ExternalPolicy(budget=8)),
+            return_info=True)
         assert info["overflow"] == 0, instance
 
 

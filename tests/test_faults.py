@@ -20,7 +20,7 @@ import numpy as np
 import pytest
 
 from repro.core import comm
-from repro.core.api import psort
+from repro.core.api import SortConfig, psort
 from repro.core.comm import FaultPlan, delay_pe, kill_pe
 from repro.data.distributions import generate_instance
 from repro.runtime.failures import FaultPolicy
@@ -120,8 +120,10 @@ def test_two_kills_two_rescales():
 def test_nested_mesh_kill_preserves_inner_axis():
     x = generate_instance("Uniform", 8, 64 * 8).astype(np.int32)
     pol = _policy(kill_pe(5))
-    out, info = psort(x, mesh_shape=(2, 4), algorithm="rams", backend="sim",
-                      fault_policy=pol, return_info=True)
+    out, info = psort(x, config=SortConfig(mesh_shape=(2, 4),
+                                           algorithm="rams", backend="sim",
+                                           fault_policy=pol),
+                      return_info=True)
     assert (np.asarray(out) == np.sort(x)).all()
     assert [a["mesh_shape"] for a in pol.attempts] == [(2, 4), (1, 4)]
     assert info["mesh_shape"] == (1, 4)
@@ -133,8 +135,10 @@ def test_batched_rows_survive_fault():
     r = np.random.default_rng(3)
     xs = r.integers(0, 1 << 20, size=(3, 16 * p)).astype(np.int32)
     pol = _policy(kill_pe(1))
-    out, info = psort(xs, p=p, algorithm="rquick", backend="sim",
-                      fault_policy=pol, return_info=True)
+    out, info = psort(xs, config=SortConfig(p=p, algorithm="rquick",
+                                            backend="sim",
+                                            fault_policy=pol),
+                      return_info=True)
     np.testing.assert_array_equal(np.asarray(out), np.sort(xs, axis=-1))
     assert info["fault"]["p_final"] == 2
 
@@ -154,14 +158,16 @@ def test_restart_budget_exhausted_reraises():
     x = np.arange(64, dtype=np.int32)
     pol = _policy(kill_pe(0), kill_pe(1), max_restarts=1)
     with pytest.raises(comm.PEFailure):
-        psort(x, p=p, algorithm="rquick", backend="sim", fault_policy=pol)
+        psort(x, config=SortConfig(p=p, algorithm="rquick",
+                                   backend="sim", fault_policy=pol))
 
 
 def test_fault_policy_requires_sim_backend():
     pol = _policy(kill_pe(0))
     with pytest.raises(ValueError, match="sim"):
-        psort(np.arange(8, dtype=np.int32), p=2, algorithm="rquick",
-              backend="shard_map", fault_policy=pol)
+        psort(np.arange(8, dtype=np.int32),
+              config=SortConfig(p=2, algorithm="rquick",
+                                backend="shard_map", fault_policy=pol))
 
 
 def test_injected_events_excluded_from_launch_stats():
@@ -170,7 +176,8 @@ def test_injected_events_excluded_from_launch_stats():
     p = 4
     x = np.arange(128, dtype=np.int32)
     pol = _policy(kill_pe(2))
-    psort(x, p=p, algorithm="rquick", backend="sim", fault_policy=pol)
+    psort(x, config=SortConfig(p=p, algorithm="rquick", backend="sim",
+                               fault_policy=pol))
     tr = pol.trace
     assert len(tr.injected()) == 2                  # kill + rescale
     assert tr.launches == len(tr.events) - 2
@@ -278,8 +285,10 @@ def test_fault_matrix_nested(algorithm):
     """Nightly: kill + straggler on a hierarchical (4, 4) mesh."""
     x = generate_instance("DeterDupl", 16, 64 * 16).astype(np.int32)
     pol = _policy(kill_pe(9), delay_pe(2, factor=8.0))
-    out, info = psort(x, mesh_shape=(4, 4), algorithm=algorithm,
-                      backend="sim", fault_policy=pol, return_info=True)
+    out, info = psort(x, config=SortConfig(mesh_shape=(4, 4),
+                                           algorithm=algorithm,
+                                           backend="sim", fault_policy=pol),
+                      return_info=True)
     assert (np.asarray(out) == np.sort(x)).all()
     _assert_fault_run(info, 16, kills=1, delays=1, rescales=2)
     assert [a["mesh_shape"] for a in pol.attempts] == [(4, 4), (2, 4), (1, 4)]

@@ -131,10 +131,11 @@ def test_kway_tie_breaking_splits_equal_keys(rng):
 def test_pallas_local_sort_inside_rquick(monkeypatch, rng):
     """End-to-end: the distributed RQuick with the Pallas local-sort kernel
     on the hot path (interpret mode) must equal np.sort."""
-    from repro.core.api import psort
+    from repro.core.api import SortConfig, psort
     monkeypatch.setenv("REPRO_PALLAS_LOCAL_SORT", "1")
     x = rng.integers(0, 10, size=512).astype(np.int32)   # heavy duplicates
-    out, info = psort(x, p=4, algorithm="rquick", return_info=True)
+    out, info = psort(x, config=SortConfig(p=4, algorithm="rquick"),
+                      return_info=True)
     assert (np.asarray(out) == np.sort(x)).all()
     assert info["overflow"] == 0
 
@@ -144,19 +145,20 @@ def test_pallas_flag_busts_psort_jit_cache(monkeypatch, rng):
     must retrace (the flag is a jit cache key), not silently reuse the
     kernel-less executable."""
     import repro.kernels.bitonic as kb
-    from repro.core.api import psort
+    from repro.core.api import SortConfig, psort
     # n=512, p=4 → capacity 256: a power of two, so the kernel gate
     # (kernels.bitonic.supported) accepts the shard
     x = rng.integers(0, 1 << 20, size=512).astype(np.int32)
 
     monkeypatch.delenv("REPRO_PALLAS_LOCAL_SORT", raising=False)
-    out_plain = psort(x, p=4, algorithm="bitonic", backend="sim")
+    cfg = SortConfig(p=4, algorithm="bitonic", backend="sim")
+    out_plain = psort(x, config=cfg)
 
     called = []
     real = kb.local_sort_fast
     monkeypatch.setattr(kb, "local_sort_fast",
                         lambda *a: (called.append(1), real(*a))[1])
     monkeypatch.setenv("REPRO_PALLAS_LOCAL_SORT", "1")
-    out_pallas = psort(x, p=4, algorithm="bitonic", backend="sim")
+    out_pallas = psort(x, config=cfg)
     assert called, "flag flip did not retrace: Pallas kernel never traced"
     assert (np.asarray(out_pallas) == np.asarray(out_plain)).all()

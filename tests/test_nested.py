@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import comm, selection
-from repro.core.api import psort, trace_collectives
+from repro.core.api import SortConfig, psort, trace_collectives
 from repro.core.rams import nested_level_bits
 from repro.data.distributions import generate_instance
 from repro.dist.sharding import sort_mesh
@@ -32,13 +32,14 @@ def _assert_nested_matches_flat(x, p_o, p_i, algorithm, backend,
     """Nested run ≡ flat run of the same level schedule (keys, perm,
     counts, overflow) — the bitwise-identity acceptance bar."""
     p = p_o * p_i
-    out_n, info_n = psort(x, mesh_shape=(p_o, p_i), algorithm=algorithm,
-                          backend=backend, return_info=True, levels=levels)
+    cfg_n = SortConfig(mesh_shape=(p_o, p_i), algorithm=algorithm,
+                       backend=backend, levels=levels)
+    out_n, info_n = psort(x, config=cfg_n, return_info=True)
     kw = {}
     if algorithm == "rams":
         kw["level_bits"] = tuple(nested_level_bits(p_o, p_i, levels))
-    out_f, info_f = psort(x, p=p, algorithm=algorithm, backend=backend,
-                          return_info=True, **kw)
+    cfg_f = SortConfig(p=p, algorithm=algorithm, backend=backend, algo_kw=kw)
+    out_f, info_f = psort(x, config=cfg_f, return_info=True)
     assert info_n["overflow"] == 0, (algorithm, backend)
     assert info_n["mesh_shape"] == (p_o, p_i)
     assert (np.asarray(out_n) == np.asarray(out_f)).all(), \
@@ -90,10 +91,10 @@ def test_batched_nested_rows_match_unbatched():
     d, p_o, p_i = 2, 2, 2
     xs = np.stack([generate_instance("Uniform", 4, 11 * 4, seed=13 + r)
                    .astype(np.int32) for r in range(d)])
-    out = np.asarray(psort(xs, mesh_shape=(p_o, p_i), algorithm="rams"))
+    cfg = SortConfig(mesh_shape=(p_o, p_i), algorithm="rams")
+    out = np.asarray(psort(xs, config=cfg))
     for r in range(d):
-        ref = np.asarray(psort(xs[r], mesh_shape=(p_o, p_i),
-                               algorithm="rams"))
+        ref = np.asarray(psort(xs[r], config=cfg))
         assert (out[r] == ref).all()
         assert (ref == np.sort(xs[r])).all()
 
@@ -104,7 +105,8 @@ def test_single_member_outer_axis_is_pure_intra():
     p = 8
     x = generate_instance("Uniform", p, 20 * p, seed=17).astype(np.int32)
     _assert_nested_matches_flat(x, 1, p, "rams", "sim")
-    t = trace_collectives(20 * p, mesh_shape=(1, p), algorithm="rams")
+    t = trace_collectives(20 * p, SortConfig(mesh_shape=(1, p),
+                                             algorithm="rams"))
     ax = t.by_axis()
     assert ax["intra"]["wire_bytes"] > 0
     # the decomposition still launches outer-stage collectives on the
@@ -197,7 +199,8 @@ def test_nested_view_rejects_misaligned_groups_and_perms():
 def test_per_level_attribution_sums_to_totals():
     """The shuffle/level tags partition the nested trace — per-level
     launches and bytes sum back to the whole-trace totals."""
-    t = trace_collectives(32 * 64, mesh_shape=(4, 16), algorithm="rams")
+    t = trace_collectives(32 * 64, SortConfig(mesh_shape=(4, 16),
+                                              algorithm="rams"))
     tot = t.summary()
     per_tag = t.by_tag()
     assert set(per_tag) == {"shuffle", "level0", "level1"}
@@ -215,8 +218,10 @@ def test_intra_levels_match_flat_trace_per_tag():
     are identical (primitive, bytes) to the flat-axis oracle's."""
     n, p_o, p_i = 32 * 64, 4, 16
     bits = tuple(nested_level_bits(p_o, p_i))
-    tn = trace_collectives(n, mesh_shape=(p_o, p_i), algorithm="rams")
-    tf = trace_collectives(n, p_o * p_i, "rams", level_bits=bits)
+    tn = trace_collectives(n, SortConfig(mesh_shape=(p_o, p_i),
+                                         algorithm="rams"))
+    tf = trace_collectives(n, SortConfig(p=p_o * p_i, algorithm="rams",
+                                         algo_kw={"level_bits": bits}))
     # flat trace carries the same tags on the virtual axis
     assert tn.tags() == tf.tags()
     for tag in tn.tags():
@@ -231,7 +236,8 @@ def test_intra_levels_match_flat_trace_per_tag():
 def test_outer_axis_carries_exactly_one_level_a2a():
     """The issue's headline invariant: the slow axis carries the shuffle
     and exactly one level's all_to_all volume — no other level."""
-    t = trace_collectives(16 * 1024, mesh_shape=(16, 64), algorithm="rams")
+    t = trace_collectives(16 * 1024, SortConfig(mesh_shape=(16, 64),
+                                                algorithm="rams"))
     inter_a2a = t.filter(primitive="all_to_all", axis="inter")
     assert inter_a2a.tags() == ["level0", "shuffle"]
     # one slotted exchange = 3 launches (keys, payload, per-slot counts)
@@ -246,9 +252,9 @@ def test_outer_axis_carries_exactly_one_level_a2a():
 
 def test_trace_nested_d_invariance():
     """Adding data-axis rows leaves the per-PE nested trace unchanged."""
-    t1 = trace_collectives(32 * 16, mesh_shape=(4, 4), algorithm="rams")
-    t3 = trace_collectives(32 * 16, mesh_shape=(4, 4), algorithm="rams",
-                           d=3)
+    cfg = SortConfig(mesh_shape=(4, 4), algorithm="rams")
+    t1 = trace_collectives(32 * 16, cfg)
+    t3 = trace_collectives(32 * 16, cfg, d=3)
     assert t1.summary() == t3.summary()
     assert t1.by_axis() == t3.by_axis()
 
@@ -261,20 +267,22 @@ def test_trace_nested_d_invariance():
 def test_levels_plumbed_through_psort():
     p = 64
     x = generate_instance("Uniform", p, 16 * p, seed=23).astype(np.int32)
-    out1, i1 = psort(x, p=p, algorithm="rams", backend="sim", levels=1,
-                     return_info=True)
-    out2, i2 = psort(x, p=p, algorithm="rams", backend="sim", levels=2,
-                     return_info=True)
+    cfg = SortConfig(p=p, algorithm="rams", backend="sim", levels=1)
+    out1, i1 = psort(x, config=cfg, return_info=True)
+    out2, i2 = psort(x, config=cfg.replace(levels=2), return_info=True)
     assert i1["overflow"] == 0 and i2["overflow"] == 0
     assert (np.asarray(out1) == np.sort(x)).all()
     assert (np.asarray(out2) == np.sort(x)).all()
     # the schedules differ: level counts show up in the counted traces
-    t1 = trace_collectives(16 * p, p, "rams", levels=1)
-    t2 = trace_collectives(16 * p, p, "rams", levels=2)
+    t1 = trace_collectives(16 * p, SortConfig(p=p, algorithm="rams",
+                                              levels=1))
+    t2 = trace_collectives(16 * p, SortConfig(p=p, algorithm="rams",
+                                              levels=2))
     assert set(t1.tags()) == {"shuffle", "level0"}
     assert set(t2.tags()) == {"shuffle", "level0", "level1"}
     with pytest.raises(ValueError):
-        psort(x, p=p, algorithm="rquick", backend="sim", levels=2)
+        psort(x, config=SortConfig(p=p, algorithm="rquick",
+                                   backend="sim", levels=2))
 
 
 def test_levels1_matches_samplesort_structure():
@@ -283,8 +291,9 @@ def test_levels1_matches_samplesort_structure():
     exchange a2a at 3 launches each — keys, payload, slot counts).  Only
     the ppermute prefix-scan of AMS's perfect in-group balancing remains."""
     n, p = 32 * 64, 64
-    tr = trace_collectives(n, p, "rams", levels=1)
-    ts = trace_collectives(n, p, "ssort")
+    tr = trace_collectives(n, SortConfig(p=p, algorithm="rams",
+                                         levels=1))
+    ts = trace_collectives(n, SortConfig(p=p, algorithm="ssort"))
     assert tr.counts()["all_to_all"] == ts.counts()["all_to_all"]
     assert tr.counts()["all_gather"] == ts.counts()["all_gather"] == 1
     assert set(ts.counts()) == {"all_to_all", "all_gather"}
@@ -324,9 +333,12 @@ def test_sort_mesh_nested_shapes_and_errors():
 def test_psort_nested_rejects_bad_args():
     x = np.arange(64, dtype=np.int32)
     with pytest.raises(ValueError):
-        psort(x, p=16, mesh_shape=(2, 4), backend="sim")   # p mismatch
+        psort(x, config=SortConfig(p=16, mesh_shape=(2, 4),
+                                   backend="sim"))        # p mismatch
     with pytest.raises(ValueError):
-        psort(x, mesh_shape=(3, 4), backend="sim")         # not a power of 2
+        psort(x, config=SortConfig(mesh_shape=(3, 4),
+                                   backend="sim"))        # not a power of 2
     mesh_flat = sort_mesh(4, d=2)
     with pytest.raises(ValueError):
-        psort(x, mesh_shape=(2, 4), mesh=mesh_flat)        # wrong axes
+        psort(x, config=SortConfig(mesh_shape=(2, 4),
+                                   mesh=mesh_flat))       # wrong axes

@@ -287,15 +287,14 @@ def _e2e_cells():
 
 @pytest.mark.parametrize("algorithm,instance", list(_e2e_cells()))
 def test_psort_kernel_policy_bitwise(clean_policy, algorithm, instance):
-    from repro.core.api import psort
+    from repro.core.api import SortConfig, psort
     p = 8
     x = generate_instance(instance, p, 32 * p, seed=3).astype(np.int32)
     set_local_kernels(LocalKernelPolicy())
-    off, i0 = psort(x, p=p, algorithm=algorithm, backend="sim",
-                    return_info=True)
+    cfg = SortConfig(p=p, algorithm=algorithm, backend="sim")
+    off, i0 = psort(x, config=cfg, return_info=True)
     set_local_kernels(LocalKernelPolicy(sort=True, partition=True))
-    on, i1 = psort(x, p=p, algorithm=algorithm, backend="sim",
-                   return_info=True)
+    on, i1 = psort(x, config=cfg, return_info=True)
     np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
     assert i0["overflow"] == i1["overflow"]
     if algorithm != "ssort" or instance not in SSORT_OVERFLOWS:
@@ -308,11 +307,12 @@ def test_local_kernels_env_busts_psort_jit_cache(clean_policy, monkeypatch):
     retrace (the policy keys the jit cache), not reuse the kernel-less
     executable — and the retraced result must stay bitwise identical."""
     import repro.core.rams as rams_mod
-    from repro.core.api import psort
+    from repro.core.api import SortConfig, psort
     rng = np.random.default_rng(7)
     x = rng.integers(0, 1 << 20, size=2048).astype(np.int32)
 
-    out_plain = psort(x, p=4, algorithm="rams", backend="sim")
+    cfg = SortConfig(p=4, algorithm="rams", backend="sim")
+    out_plain = psort(x, config=cfg)
 
     called = []
     real = rams_mod.partition_buckets
@@ -320,7 +320,7 @@ def test_local_kernels_env_busts_psort_jit_cache(clean_policy, monkeypatch):
         rams_mod, "partition_buckets",
         lambda *a, **k: (called.append(1), real(*a, **k))[1])
     monkeypatch.setenv("REPRO_LOCAL_KERNELS", "partition")
-    out_kern = psort(x, p=4, algorithm="rams", backend="sim")
+    out_kern = psort(x, config=cfg)
     assert called, "policy flip did not retrace psort"
     np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_kern))
 

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import comm, psort, queries, selection
+from repro.core.api import SortConfig
 from repro.core.queries import (QUERY_KINDS, n_rounds, percentile,
                                 range_query, rank_of_key, select_rank,
                                 shard_data, top_k, trace_query)
@@ -77,7 +78,7 @@ def test_selection_agrees_with_fullsort_psort(instance):
     full-sort path answer identically, bit for bit."""
     x = generate_instance(instance, P, 32 * P).astype(np.int64)
     data = shard_data(x, P)
-    full = np.asarray(psort(x, p=P, backend="sim"))
+    full = np.asarray(psort(x, config=SortConfig(p=P, backend="sim")))
     n = len(x)
     ranks = np.array([1, n // 4, n // 2, n])
     vals, _, _ = select_rank(data, ranks)

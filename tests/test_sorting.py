@@ -44,8 +44,8 @@ def test_power_of_two_pe_counts(p):
 def test_float_and_negative_keys():
     r = np.random.default_rng(2)
     xf = r.normal(size=500).astype(np.float32)
-    out = np.asarray(__import__("repro.core.api", fromlist=["psort"]).psort(
-        xf, p=8, algorithm="rquick"))
+    from repro.core.api import SortConfig, psort
+    out = np.asarray(psort(xf, config=SortConfig(p=8, algorithm="rquick")))
     assert (out == np.sort(xf)).all()
     xi = r.integers(-2**31, 2**31, size=500).astype(np.int32)
     check_sort(xi, 8, "rquick")
@@ -69,8 +69,9 @@ def test_ntb_quick_fails_on_duplicates():
     """RQuick without tie-breaking degenerates on DeterDupl (Fig. 2a)."""
     p = 8
     x = generate_instance("DeterDupl", p, 64 * p).astype(np.int32)
-    out, info = __import__("repro.core.api", fromlist=["psort"]).psort(
-        x, p=p, algorithm="ntb-quick", return_info=True)
+    from repro.core.api import SortConfig, psort
+    out, info = psort(x, config=SortConfig(p=p, algorithm="ntb-quick"),
+                      return_info=True)
     # either overflow or gross imbalance must be observed
     assert info["overflow"] > 0 or info["balance"] > 3.0
 
@@ -86,6 +87,7 @@ def test_auto_selection_regimes():
 
 def test_auto_psort_small():
     x = np.random.default_rng(3).integers(0, 100, 64).astype(np.int32)
-    out, info = __import__("repro.core.api", fromlist=["psort"]).psort(
-        x, p=8, algorithm="auto", return_info=True)
+    from repro.core.api import SortConfig, psort
+    out, info = psort(x, config=SortConfig(p=8, algorithm="auto"),
+                      return_info=True)
     assert (np.asarray(out) == np.sort(x)).all()

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import comm
-from repro.core.api import psort, trace_collectives
+from repro.core.api import SortConfig, psort, trace_collectives
 from repro.data.distributions import generate_instance
 from repro.dist.sharding import sort_mesh
 
@@ -33,13 +33,12 @@ def _rows(d, p, n_per, seed=3):
 
 def _assert_rows_match_1d(xs, p, algorithm, backend):
     """Batched run row r ≡ 1-D run of row r (keys, perm, counts, overflow)."""
-    out2, info2 = psort(xs, p=p, algorithm=algorithm, return_info=True,
-                        backend=backend)
+    cfg = SortConfig(p=p, algorithm=algorithm, backend=backend)
+    out2, info2 = psort(xs, config=cfg, return_info=True)
     out2 = np.asarray(out2)
     assert info2["overflow"] == 0
     for r in range(xs.shape[0]):
-        out1, info1 = psort(xs[r], p=p, algorithm=algorithm,
-                            return_info=True, backend=backend)
+        out1, info1 = psort(xs[r], config=cfg, return_info=True)
         assert (out2[r] == np.asarray(out1)).all(), (algorithm, backend, r)
         assert (info2["perm"][r] == info1["perm"]).all(), (algorithm, r)
         assert (info2["counts"][r] == info1["counts"]).all(), (algorithm, r)
@@ -79,8 +78,9 @@ def test_shard_map_explicit_mesh_and_defaults():
     d, p = 2, 4
     xs = _rows(d, p, 11 * p)
     mesh = sort_mesh(p, d=d)
-    out_explicit = np.asarray(psort(xs, mesh=mesh, algorithm="rquick"))
-    out_default = np.asarray(psort(xs, algorithm="rquick"))
+    out_explicit = np.asarray(psort(
+        xs, config=SortConfig(mesh=mesh, algorithm="rquick")))
+    out_default = np.asarray(psort(xs, config=SortConfig(algorithm="rquick")))
     assert (out_explicit == out_default).all()
     assert (out_explicit == np.sort(xs, axis=-1)).all()
 
@@ -157,8 +157,9 @@ def test_counting_inside_mesh_mode():
 
 def test_trace_collectives_d_invariance():
     """The EXPERIMENTS.md subgroup-grid property, at API level."""
-    t1 = trace_collectives(32 * 16, 16, "rams")
-    t4 = trace_collectives(32 * 16, 16, "rams", d=4)
+    t1 = trace_collectives(32 * 16, SortConfig(p=16, algorithm="rams"))
+    t4 = trace_collectives(32 * 16, SortConfig(p=16, algorithm="rams"),
+                           d=4)
     assert t1.summary() == t4.summary()
 
 
@@ -181,13 +182,17 @@ def test_sort_mesh_shapes_and_errors():
 def test_batched_psort_rejects_bad_args():
     xs = np.arange(32, dtype=np.int32).reshape(2, 16)
     with pytest.raises(ValueError):
-        psort(xs, algorithm="rquick", backend="sim")       # p required
+        psort(xs, config=SortConfig(algorithm="rquick",
+                                    backend="sim"))       # p required
     with pytest.raises(ValueError):
-        psort(xs[None], p=4, algorithm="rquick", backend="sim")  # 3-D keys
+        psort(xs[None], config=SortConfig(p=4, algorithm="rquick",
+                                          backend="sim"))  # 3-D keys
     from jax.sharding import Mesh
     mesh1d = Mesh(np.array(jax.devices()[:4]), ("sort",))
     with pytest.raises(ValueError):
-        psort(xs, mesh=mesh1d, algorithm="rquick")         # no data axis
+        psort(xs, config=SortConfig(mesh=mesh1d,
+                                    algorithm="rquick"))  # no data axis
     mesh_wrong_d = sort_mesh(2, d=4)
     with pytest.raises(ValueError):
-        psort(xs, mesh=mesh_wrong_d, algorithm="rquick")   # d mismatch
+        psort(xs, config=SortConfig(mesh=mesh_wrong_d,
+                                    algorithm="rquick"))  # d mismatch
